@@ -1,0 +1,28 @@
+"""Fig. 12 — joint-optimisation alpha sweep and replication-degree gamma sweep."""
+import numpy as np
+
+from .common import FULL, sim_config
+
+
+def run(ctx):
+    from repro.sim import sweep_alpha, sweep_gamma
+
+    alphas = np.arange(0.0, 1.01, 0.01) if FULL else (0.0, 0.25, 0.5, 0.75, 1.0)
+    # PED so predicted failure actually crosses beta inside the window
+    rows = sweep_alpha(alphas, sim_config(scenario="ped"))
+    for a, svc, pf in rows:
+        ctx.emit(f"fig12a_alpha_{a:.2f}_service", svc, f"pf={pf:.4f}")
+    # trend: more weight on latency (alpha up) -> service time down, pf up
+    svcs = [r[1] for r in rows]
+    pfs = [r[2] for r in rows]
+    ctx.emit("fig12a_service_trend", svcs[0] - svcs[-1],
+             "s saved from alpha=0 to alpha=1 (>0 expected)")
+    ctx.emit("fig12a_pf_trend", pfs[-1] - pfs[0],
+             "P_f increase from alpha=0 to alpha=1 (>=0 expected)")
+
+    gammas = (0, 1, 2, 3, 4, 6, 8) if FULL else (0, 1, 3, 6)
+    rows = sweep_gamma(gammas, sim_config(scenario="ped"))
+    for g, svc, pf, nrep in rows:
+        ctx.emit(f"fig12b_gamma_{g}_pf", pf, f"svc={svc:.3f}s reps={nrep:.2f}")
+    ctx.emit("fig12b_pf_drop_0_to_max", rows[0][2] - rows[-1][2],
+             "P_f reduction from replication (paper: saturates ~6)")

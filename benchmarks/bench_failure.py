@@ -1,0 +1,33 @@
+"""Fig. 9 — probability of failure: 6 schemes x 3 scenarios (+ headline)."""
+import numpy as np
+
+from .common import SCENARIOS, SCHEMES
+
+
+def run(ctx):
+    grid = ctx.grid()
+    for scen in SCENARIOS:
+        for scheme in SCHEMES:
+            r = grid[(scheme, scen)]
+            ctx.emit(f"fig9_pf_{scen}_{scheme}", r.prob_failure, "")
+    rels = []
+    for scen in SCENARIOS:
+        ib = grid[("ibdash", scen)].prob_failure
+        best = min(grid[(s, scen)].prob_failure for s in SCHEMES if s != "ibdash")
+        rel = 100 * (1 - ib / max(best, 1e-9))
+        rels.append(rel)
+        ctx.emit(f"fig9_ibdash_vs_best_{scen}", rel, "% P_f reduction")
+        # paper also reports IBDASH vs LaTS per scenario (29.7/58.5/34 %)
+        lats = grid[("lats", scen)].prob_failure
+        ctx.emit(f"fig9_ibdash_vs_lats_{scen}",
+                 100 * (1 - ib / max(lats, 1e-9)), "% vs LaTS")
+    ctx.emit("fig9_ibdash_vs_best_avg", float(np.mean(rels)),
+             "% avg reduction (paper: 41% vs best baseline)")
+    # vs the strongest NON-LaTS baseline (the load-balancing family)
+    rels2 = []
+    for scen in SCENARIOS:
+        ib = grid[("ibdash", scen)].prob_failure
+        best = min(grid[(s, scen)].prob_failure
+                   for s in ("lavea", "petrel", "round_robin", "random"))
+        rels2.append(100 * (1 - ib / max(best, 1e-9)))
+    ctx.emit("fig9_ibdash_vs_best_nonlats_avg", float(np.mean(rels2)), "%")

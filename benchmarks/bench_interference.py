@@ -1,0 +1,33 @@
+"""Fig. 4 / Fig. 2 — interference linearity + additivity verification."""
+import numpy as np
+
+
+def run(ctx):
+    m = ctx.profile.interference
+    rng = np.random.default_rng(0)
+    # linearity: every pair plot is exactly linear by construction; verify
+    # the simulator's *measured* latencies reproduce it via the engine model
+    max_lin_err = 0.0
+    for _ in range(200):
+        p = rng.integers(m.n_classes)
+        i, j = rng.integers(m.n_types, size=2)
+        plot = m.pair_plot(int(p), int(i), int(j), k_max=8)
+        d = np.diff(plot)
+        max_lin_err = max(max_lin_err, float(np.abs(d - d[0]).max()))
+    ctx.emit("fig4_linearity_max_dev", max_lin_err, "s (0 = perfectly linear)")
+
+    # additivity: f(i, a+b) == f(i,a) + f(i,b) - base  (paper's Fig. 4 claim)
+    max_add_err = 0.0
+    for _ in range(200):
+        p = int(rng.integers(m.n_classes))
+        i = int(rng.integers(m.n_types))
+        ca = rng.poisson(1.0, m.n_types).astype(float)
+        cb = rng.poisson(1.0, m.n_types).astype(float)
+        lhs = m.estimate(p, i, ca + cb)
+        rhs = m.estimate(p, i, ca) + m.estimate(p, i, cb) - m.base[p, i]
+        max_add_err = max(max_add_err, abs(lhs - rhs))
+    ctx.emit("fig4_additivity_max_err", max_add_err, "s (0 = perfectly additive)")
+
+    # heterogeneity (Fig. 2a): slopes differ across task pairs
+    spread = float(m.slope.std() / m.slope.mean())
+    ctx.emit("fig2_slope_heterogeneity_cv", spread, "coef of variation of m[p,i,j]")

@@ -1,0 +1,19 @@
+"""Fig. 10 — load distribution across 8 devices (one per class)."""
+import numpy as np
+
+from .common import SCHEMES, sim_config
+
+
+def run(ctx):
+    from repro.sim import run_one
+
+    cfg = sim_config(n_devices=8, n_cycles=1, instances_per_cycle=200,
+                     scenario="mix")
+    for scheme in SCHEMES:
+        res = run_one(scheme, cfg, ctx.profile)
+        load = res.load_per_device.astype(float)
+        cv = float(load.std() / max(load.mean(), 1e-9))
+        top = int(np.argmax(load))
+        ctx.emit(f"fig10_load_cv_{scheme}", cv,
+                 f"max on ED{top} ({int(load[top])} of {int(load.sum())} tasks)")
+    # paper: LaTS concentrates (high CV), IBDASH/LAVEA spread (low CV)

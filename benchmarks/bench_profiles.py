@@ -1,0 +1,27 @@
+"""Table III / Fig. 5 — device profiles + LaTS log-linear latency-CPU fit."""
+import numpy as np
+
+
+def run(ctx):
+    prof = ctx.profile
+    m = prof.interference
+    # Fig. 5: is log(latency) ~ linear in CPU usage on each class?
+    rng = np.random.default_rng(1)
+    for p in range(m.n_classes):
+        xs, ys = [], []
+        for _ in range(300):
+            counts = rng.poisson(rng.uniform(0.2, 2.5), m.n_types).astype(float)
+            usage = min(float((prof.cpu_usage[p] * counts).sum()), 4.0)
+            i = int(rng.integers(m.n_types))
+            xs.append(usage)
+            ys.append(np.log(m.estimate(p, i, counts) / m.base[p, i]))
+        A = np.stack([np.asarray(xs), np.ones(len(xs))], 1)
+        coef, res, *_ = np.linalg.lstsq(A, np.asarray(ys), rcond=None)
+        ss_tot = float(((ys - np.mean(ys)) ** 2).sum())
+        r2 = 1 - float(res[0]) / ss_tot if len(res) and ss_tot > 0 else 1.0
+        name = prof.classes[p].name
+        ctx.emit(f"fig5_loglat_vs_cpu_r2_{name}", r2, f"b={coef[0]:.3f}")
+    # Table III sanity: fastest class has the smallest mean base latency
+    means = m.base.mean(axis=1)
+    ctx.emit("tab3_fastest_class_idx", int(np.argmin(means)),
+             f"{prof.classes[int(np.argmin(means))].name}")

@@ -1,0 +1,29 @@
+"""Roofline terms per (arch x shape) from the dry-run grid (§Roofline)."""
+import json
+import os
+
+
+def run(ctx):
+    from repro.launch.roofline import build_table
+
+    path = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
+    if not os.path.exists(path):
+        ctx.emit("roofline_skipped", 0, "dryrun_results.json missing — run "
+                 "python -m repro.launch.dryrun --all --mesh both --out dryrun_results.json")
+        return
+    with open(path) as f:
+        results = json.load(f)
+    rows = build_table(results, mesh="single")
+    for r in rows:
+        ctx.emit(
+            f"roofline_{r['arch']}_{r['shape']}",
+            r["bound_s"],
+            f"dom={r['dominant']} comp={r['compute_s']:.3g}s "
+            f"mem={r['memory_s']:.3g}s coll={r['collective_s']:.3g}s "
+            f"useful={r['useful_ratio']:.2f} mfu<={r['mfu_bound']:.2f}",
+        )
+    n_by = {}
+    for r in rows:
+        n_by[r["dominant"]] = n_by.get(r["dominant"], 0) + 1
+    for k, v in sorted(n_by.items()):
+        ctx.emit(f"roofline_dominant_{k}", v, "cells")

@@ -1,0 +1,26 @@
+"""Fig. 8 — average service time: 6 schemes x 3 scenarios (+ headline claim)."""
+import numpy as np
+
+from .common import SCENARIOS, SCHEMES
+
+
+def run(ctx):
+    grid = ctx.grid()
+    for scen in SCENARIOS:
+        for scheme in SCHEMES:
+            r = grid[(scheme, scen)]
+            ctx.emit(f"fig8_service_{scen}_{scheme}", r.avg_service_time, "s")
+    # headline: IBDASH vs best baseline (paper: -14 % avg)
+    rels = []
+    for scen in SCENARIOS:
+        ib = grid[("ibdash", scen)].avg_service_time
+        best = min(grid[(s, scen)].avg_service_time for s in SCHEMES if s != "ibdash")
+        rels.append(1 - ib / best)
+        ctx.emit(f"fig8_ibdash_vs_best_{scen}", 100 * (1 - ib / best),
+                 "% service-time reduction")
+    ctx.emit("fig8_ibdash_vs_best_avg", 100 * float(np.mean(rels)),
+             "% avg reduction (paper: 14%)")
+    # per-application split (paper plots each app separately)
+    for scheme in ("ibdash", "lavea"):
+        for app, (svc, _) in grid[(scheme, "mix")].per_app().items():
+            ctx.emit(f"fig8_mix_{scheme}_{app}", svc, "s")

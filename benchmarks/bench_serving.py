@@ -1,0 +1,19 @@
+"""Beyond-paper: IBDASH as a serving-fleet scheduler (latency + preemption)."""
+import numpy as np
+
+
+def run(ctx):
+    from repro.serve.scheduler import ServingFleet, serving_interference_model
+
+    im = serving_interference_model()
+    base = {}
+    for pol in ("ibdash", "petrel", "lavea", "round_robin"):
+        fleet = ServingFleet(im, policy=pol, n_replicas=16, seed=0)
+        res = fleet.run(n_requests=600, arrival_window=8.0, seed=1)
+        base[pol] = res
+        ctx.emit(f"serve_{pol}_latency_ms", res.avg_service_time * 1e3, "")
+        ctx.emit(f"serve_{pol}_failrate", res.prob_failure, "")
+    best_l = min(r.avg_service_time for k, r in base.items() if k != "ibdash")
+    ctx.emit("serve_ibdash_latency_gain",
+             100 * (1 - base["ibdash"].avg_service_time / best_l),
+             "% vs best baseline policy")

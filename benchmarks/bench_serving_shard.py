@@ -1,0 +1,35 @@
+"""Beyond-paper: weight-stationary (TP) serving sharding vs FSDP baseline —
+collective-byte reduction per decode/prefill cell (from the dry-run grid)."""
+import json
+import os
+
+
+def run(ctx):
+    path = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
+    if not os.path.exists(path):
+        ctx.emit("serving_shard_skipped", 0, "dryrun_results.json missing")
+        return
+    with open(path) as f:
+        results = json.load(f)
+    gains = []
+    for key, rec in sorted(results.items()):
+        if rec.get("status") != "ok" or rec.get("mesh") != "single":
+            continue
+        if rec["shape"] not in ("decode_32k", "prefill_32k", "long_500k"):
+            continue
+        if rec.get("variant", {}).get("infer_shard") != "tp":
+            continue
+        base_key = f"{rec['arch']}|{rec['shape']}|single|remat=block"
+        base = results.get(base_key)
+        if not base or base.get("status") != "ok":
+            continue
+        b = base["collectives"]["total_bytes"]
+        t = rec["collectives"]["total_bytes"]
+        gain = b / max(t, 1.0)
+        gains.append(gain)
+        ctx.emit(f"tp_coll_gain_{rec['arch']}_{rec['shape']}", gain,
+                 f"{b:.2e} -> {t:.2e} B/step")
+    if gains:
+        import numpy as np
+        ctx.emit("tp_coll_gain_geomean", float(np.exp(np.mean(np.log(gains)))),
+                 f"over {len(gains)} serving cells")

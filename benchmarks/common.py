@@ -1,0 +1,69 @@
+"""Shared benchmark context: one simulation grid reused by the Fig.8/9
+benches, CSV row helpers, and the --full switch (paper-scale protocol)."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+SCHEMES = ("ibdash", "lats", "lavea", "petrel", "round_robin", "random")
+SCENARIOS = ("ced", "ped", "mix")
+
+
+def sim_config(**kw):
+    from repro.sim import SimConfig
+
+    base = dict(
+        n_cycles=20 if FULL else 8,
+        instances_per_cycle=1000 if FULL else 400,
+        seed=0,
+    )
+    base.update(kw)
+    return SimConfig(**base)
+
+
+@dataclass
+class Ctx:
+    """Lazily-computed shared state across benches."""
+
+    _grid: Optional[Dict] = None
+    _profile: object = None
+    rows: List[Tuple[str, float, str]] = field(default_factory=list)
+
+    @property
+    def profile(self):
+        if self._profile is None:
+            from repro.sim import make_profile
+
+            self._profile = make_profile(seed=0)
+        return self._profile
+
+    def grid(self) -> Dict:
+        """(scheme, scenario) -> SimResult, computed once."""
+        if self._grid is None:
+            from dataclasses import replace
+
+            from repro.sim import run_one
+
+            out = {}
+            for scen in SCENARIOS:
+                cfg = sim_config(scenario=scen)
+                for scheme in SCHEMES:
+                    t0 = time.time()
+                    out[(scheme, scen)] = run_one(scheme, cfg, self.profile)
+                    print(f"# sim {scheme}/{scen} done in {time.time()-t0:.1f}s",
+                          file=sys.stderr)
+            self._grid = out
+        return self._grid
+
+    def emit(self, name: str, value: float, derived: str = "") -> None:
+        self.rows.append((name, value, derived))
+        print(f"{name},{value:.6g},{derived}")

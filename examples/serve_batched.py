@@ -1,0 +1,19 @@
+"""End-to-end serving driver (the paper's kind dictates serving):
+
+  1. serve a small model with batched requests (continuous batching);
+  2. measure + fit the linear interference law on real decode timings
+     (the Fig.-4 linearity verification, serving edition);
+  3. feed the measured coefficients to the IBDASH fleet scheduler and
+     compare policies across a 16-replica, half-preemptible fleet.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import serve_demo
+
+if __name__ == "__main__":
+    serve_demo(n_requests=48, max_batch=8)

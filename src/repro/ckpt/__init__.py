@@ -1,0 +1,5 @@
+"""Checkpointing: atomic, checksummed, replicated, async — cadence driven by
+the paper's exponential availability model (Young/Daly interval)."""
+from .checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint"]

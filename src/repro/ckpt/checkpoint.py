@@ -1,0 +1,206 @@
+"""Checkpoint save/restore.
+
+Production requirements implemented here:
+  * atomic writes (tmp + rename) with a JSON manifest carrying step, tree
+    structure and per-leaf CRC32 checksums — a torn write can never be
+    mistaken for a valid checkpoint;
+  * REPLICATION across k independent directories ("devices" in the paper's
+    sense): the paper's insight — replicate work placed on failure-prone
+    resources — applied to checkpoint durability.  Restore scans replicas
+    in recency order and takes the first that passes checksum validation;
+  * async mode: the save runs on a background thread over a host snapshot
+    of the arrays, overlapping serialization with the next train steps;
+  * ``CheckpointManager.maybe_save`` implements the Young/Daly cadence
+    ``tau = sqrt(2 C / lambda)`` from the fleet failure rate (paper's
+    Table-IV exponential model), re-estimated online from observed write
+    costs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from ..core.availability import gang_failure_rate, young_daly_interval
+
+__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    arrs = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    return arrs, treedef
+
+
+def _crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
+
+
+def save_checkpoint(path: str, tree: Any, step: int,
+                    extra: Optional[Dict[str, Any]] = None) -> str:
+    """Atomically write one checkpoint directory ``<path>/step_<n>``."""
+    os.makedirs(path, exist_ok=True)
+    final = os.path.join(path, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=".ckpt_tmp_", dir=path)
+    try:
+        arrs, _ = _flatten(tree)
+        manifest = {
+            "step": int(step),
+            "time": time.time(),
+            "leaves": {
+                k: {"shape": list(v.shape), "dtype": str(v.dtype), "crc": _crc(v)}
+                for k, v in arrs.items()
+            },
+            "extra": extra or {},
+        }
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrs)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        return final
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def _validate_and_load(ckpt_dir: str, like: Any) -> Tuple[Any, int, Dict]:
+    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(ckpt_dir, "arrays.npz"))
+    leaves, treedef = jax.tree.flatten(like)
+    out = []
+    for i, ref_leaf in enumerate(leaves):
+        key = f"leaf_{i}"
+        a = data[key]
+        meta = manifest["leaves"][key]
+        if _crc(a) != meta["crc"]:
+            raise IOError(f"checksum mismatch in {ckpt_dir}:{key}")
+        if list(a.shape) != list(ref_leaf.shape):
+            raise IOError(
+                f"shape mismatch in {ckpt_dir}:{key}: "
+                f"{a.shape} vs {ref_leaf.shape}"
+            )
+        out.append(a)
+    return treedef.unflatten(out), manifest["step"], manifest.get("extra", {})
+
+
+def load_checkpoint(paths: Sequence[str], like: Any
+                    ) -> Tuple[Any, int, Dict[str, Any]]:
+    """Restore the newest VALID checkpoint across every replica directory.
+
+    Corrupted/torn replicas are skipped (checksums); raises FileNotFoundError
+    when no valid checkpoint exists anywhere."""
+    candidates: List[Tuple[int, str]] = []
+    for root in paths:
+        if not os.path.isdir(root):
+            continue
+        for name in os.listdir(root):
+            if name.startswith("step_"):
+                try:
+                    candidates.append((int(name.split("_")[1]), os.path.join(root, name)))
+                except ValueError:
+                    continue
+    candidates.sort(reverse=True)
+    errors = []
+    for step, d in candidates:
+        try:
+            return _validate_and_load(d, like)
+        except Exception as e:  # torn/corrupt replica: try the next one
+            errors.append(f"{d}: {e}")
+    raise FileNotFoundError(
+        "no valid checkpoint found" + (f"; errors: {errors}" if errors else "")
+    )
+
+
+@dataclass
+class CheckpointManager:
+    """Replicated, optionally async checkpointing with Young/Daly cadence.
+
+    replica_dirs : k independent directories (ideally on independent failure
+                   domains).  The replication degree is the paper's gamma.
+    fleet_lams   : per-pod failure rates; the JOB fails if any pod fails, so
+                   rates add (gang_failure_rate).
+    """
+
+    replica_dirs: Sequence[str]
+    fleet_lams: Sequence[float] = (1e-5,)
+    async_save: bool = False
+    keep: int = 3
+
+    _last_save_t: float = field(default=0.0, init=False)
+    _write_cost: float = field(default=30.0, init=False)   # prior estimate, s
+    _thread: Optional[threading.Thread] = field(default=None, init=False)
+    _errors: List[str] = field(default_factory=list, init=False)
+
+    @property
+    def interval(self) -> float:
+        lam = gang_failure_rate(self.fleet_lams)
+        return young_daly_interval(lam, self._write_cost)
+
+    def due(self, now: Optional[float] = None) -> bool:
+        now = time.monotonic() if now is None else now
+        return (now - self._last_save_t) >= self.interval
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._errors:
+            errs, self._errors = self._errors, []
+            raise IOError(f"async checkpoint failed: {errs}")
+
+    def _write_all(self, host_tree: Any, step: int, extra) -> None:
+        t0 = time.monotonic()
+        try:
+            for d in self.replica_dirs:
+                save_checkpoint(d, host_tree, step, extra)
+                self._gc(d)
+        except Exception as e:
+            self._errors.append(str(e))
+            return
+        # online estimate of the write cost drives the Young/Daly interval
+        self._write_cost = 0.5 * self._write_cost + 0.5 * max(
+            time.monotonic() - t0, 1e-3
+        )
+
+    def save(self, tree: Any, step: int, extra: Optional[Dict] = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)  # device->host snapshot
+        self._last_save_t = time.monotonic()
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write_all, args=(host_tree, step, extra), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write_all(host_tree, step, extra)
+            if self._errors:
+                errs, self._errors = self._errors, []
+                raise IOError(f"checkpoint failed: {errs}")
+
+    def maybe_save(self, tree: Any, step: int, extra: Optional[Dict] = None) -> bool:
+        if not self.due():
+            return False
+        self.save(tree, step, extra)
+        return True
+
+    def restore(self, like: Any) -> Tuple[Any, int, Dict[str, Any]]:
+        return load_checkpoint(self.replica_dirs, like)
+
+    def _gc(self, root: str) -> None:
+        steps = sorted(
+            (n for n in os.listdir(root) if n.startswith("step_")), reverse=True
+        )
+        for name in steps[self.keep:]:
+            shutil.rmtree(os.path.join(root, name), ignore_errors=True)

@@ -1,0 +1,42 @@
+"""Assigned input shapes (the 4 per-arch cells).
+
+  train_4k     seq 4096,   global batch 256  -> lowers train_step
+  prefill_32k  seq 32768,  global batch 32   -> lowers prefill
+  decode_32k   seq 32768,  global batch 128  -> lowers serve_step (1 new
+                token against a KV cache of seq_len)
+  long_500k    seq 524288, global batch 1    -> serve_step; requires
+                sub-quadratic attention (SSM/hybrid only — full-attention
+                archs skip this cell, see DESIGN.md §Arch-applicability)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from ..models.config import ModelConfig
+
+__all__ = ["ShapeSpec", "SHAPES", "cell_applicable"]
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str           # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple:
+    """(applicable, reason).  The only skip in the assigned grid is
+    long_500k on pure full-attention architectures."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic():
+        return False, "full quadratic attention at 524k context (skip per assignment; see DESIGN.md)"
+    return True, ""

@@ -1,0 +1,56 @@
+"""IBDASH core: DAG staging, interference model, availability prediction,
+cluster state and the orchestration algorithm + baselines.
+
+This package is the paper's primary contribution, implemented exactly as in
+Algorithm 1 and reused verbatim by the distributed-training/serving runtime
+(:mod:`repro.ft`, :mod:`repro.serve`).
+"""
+from .availability import (
+    LAMBDA_CED,
+    LAMBDA_MIX,
+    LAMBDA_PED,
+    availability,
+    fit_failure_rate,
+    gang_failure_rate,
+    prob_fail_during,
+    sample_lifetime,
+    young_daly_interval,
+)
+from .baselines import LAVEA, LaTS, LaTSModel, Petrel, RandomScheduler, RoundRobinScheduler
+from .cluster import ClusterState, Device
+from .dag import AppDAG, TaskSpec, app_stage, topological_order, validate_dag
+from .interference import InterferenceModel, fit_linear_interference
+from .orchestrator import IBDASH, IBDASHConfig, Placement, Replica, Scheduler, TaskPlacement
+
+__all__ = [
+    "AppDAG",
+    "TaskSpec",
+    "app_stage",
+    "topological_order",
+    "validate_dag",
+    "InterferenceModel",
+    "fit_linear_interference",
+    "ClusterState",
+    "Device",
+    "IBDASH",
+    "IBDASHConfig",
+    "Placement",
+    "Replica",
+    "Scheduler",
+    "TaskPlacement",
+    "RandomScheduler",
+    "RoundRobinScheduler",
+    "LAVEA",
+    "Petrel",
+    "LaTS",
+    "LaTSModel",
+    "availability",
+    "prob_fail_during",
+    "sample_lifetime",
+    "fit_failure_rate",
+    "young_daly_interval",
+    "gang_failure_rate",
+    "LAMBDA_MIX",
+    "LAMBDA_CED",
+    "LAMBDA_PED",
+]

@@ -1,0 +1,136 @@
+"""Device availability / failure prediction (paper §V-F, Fig. 7, Table IV).
+
+The paper models the probability that an edge device is still available
+``t`` seconds after it joined the platform as ``P(ED) = exp(-lambda * t)``,
+with per-device failure rates ``lambda`` (Table IV: lambda_1 = mixed
+PED+CED, lambda_2 = CED-only, lambda_3 = PED-only).  It validates the model
+against a one-month campus mobility trace [13].
+
+For the distributed-training runtime the same exponential model drives two
+production decisions:
+
+  * the probability that a (preemptible) pod dies during a task of length L
+    — memoryless, so ``F = 1 - exp(-lambda * L)`` — which feeds the
+    replication loop of Algorithm 1 and the straggler/backup-task policy;
+  * the optimal checkpoint cadence: for exponential failures with MTBF
+    ``1/lambda`` and checkpoint write cost ``C`` the Young/Daly interval
+    ``sqrt(2 * C / lambda)`` minimises expected lost work.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "availability",
+    "prob_fail_during",
+    "sample_lifetime",
+    "fit_failure_rate",
+    "young_daly_interval",
+    "expected_makespan_with_restarts",
+    "LAMBDA_MIX",
+    "LAMBDA_CED",
+    "LAMBDA_PED",
+]
+
+# Table IV of the paper — failure rates per edge-device class ED0..ED7.
+LAMBDA_MIX = np.array(
+    [1.5e-6, 1.1e-4, 1.5e-4, 2.4e-5, 9e-6, 3.2e-6, 3.1e-5, 1e-7]
+)
+LAMBDA_CED = np.array(
+    [1.5e-5, 1.1e-5, 1.5e-5, 1.1e-5, 1.8e-5, 1.2e-5, 1.0e-5, 2.0e-5]
+)
+LAMBDA_PED = np.array(
+    [1.5e-4, 1.1e-4, 1.5e-4, 2.4e-4, 9e-4, 3.2e-5, 1.0e-4, 9.0e-4]
+)
+
+
+def availability(lam: float, t: float) -> float:
+    """P(device still available ``t`` seconds after joining) = exp(-lam t)."""
+    return float(np.exp(-lam * max(t, 0.0)))
+
+
+def prob_fail_during(lam: float, duration: float) -> float:
+    """``F(T_i)``: probability the device fails within ``duration`` seconds.
+
+    The exponential law is memoryless, so the window's start does not
+    matter — only its length."""
+    return float(1.0 - np.exp(-lam * max(duration, 0.0)))
+
+
+def prob_fail_during_vec(lam: np.ndarray, duration: np.ndarray) -> np.ndarray:
+    return 1.0 - np.exp(-np.asarray(lam) * np.maximum(np.asarray(duration), 0.0))
+
+
+def sample_lifetime(lam: float, rng: np.random.Generator) -> float:
+    """Draw an exponential device lifetime (time from join until it leaves)."""
+    if lam <= 0:
+        return float("inf")
+    return float(rng.exponential(1.0 / lam))
+
+
+def fit_failure_rate(
+    timestamps: Sequence[float], alive: Sequence[bool]
+) -> float:
+    """MLE of ``lambda`` from an availability trace.
+
+    ``timestamps[i]`` is the elapsed time since join of observation ``i`` and
+    ``alive[i]`` whether the device was still present.  Treats each device
+    observation as a (possibly right-censored) exponential sample:
+    lambda_hat = (#deaths) / (total observed alive-time).  This is what the
+    paper fits on the CrowdBind mobility trace (Fig. 7a)."""
+    t = np.asarray(timestamps, dtype=np.float64)
+    a = np.asarray(alive, dtype=bool)
+    if t.shape != a.shape or t.ndim != 1 or t.size == 0:
+        raise ValueError("bad trace")
+    deaths = int((~a).sum())
+    exposure = float(t.sum())
+    if exposure <= 0:
+        raise ValueError("no exposure time in trace")
+    return deaths / exposure
+
+
+def young_daly_interval(lam: float, ckpt_cost: float) -> float:
+    """Optimal checkpoint interval ``sqrt(2 C / lambda)`` for exponential
+    failures (Young '74 / Daly '06).  ``lam`` is the failure rate of the
+    *job* (sum of member-pod rates for a gang-scheduled job)."""
+    if lam <= 0:
+        return float("inf")
+    if ckpt_cost < 0:
+        raise ValueError("checkpoint cost must be >= 0")
+    return float(np.sqrt(2.0 * ckpt_cost / lam))
+
+
+def expected_makespan_with_restarts(
+    work: float, lam: float, ckpt_cost: float, interval: Optional[float] = None,
+    restart_cost: float = 0.0,
+) -> float:
+    """Expected wall-clock of ``work`` seconds of compute under exponential
+    failures with rate ``lam``, checkpointing every ``interval`` seconds at
+    cost ``ckpt_cost`` (Daly's first-order model).
+
+    Used by the FT runtime to pick between checkpoint cadences and to price
+    replication-vs-restart trade-offs, and by the tests as an oracle that
+    the Young/Daly interval is (near-)optimal."""
+    if lam <= 0:
+        n_ckpt = 0 if interval in (None, float("inf")) else int(np.ceil(work / interval)) - 1
+        return work + max(n_ckpt, 0) * ckpt_cost
+    tau = young_daly_interval(lam, ckpt_cost) if interval is None else interval
+    tau = min(tau, work)
+    if tau <= 0:
+        raise ValueError("interval must be positive")
+    # Daly's first-order model: a segment holds tau useful seconds + a
+    # checkpoint; expected #failures per segment is exp(lam*(tau+C)) - 1 and
+    # the expected wall-clock per segment is (1/lam)(exp(lam*(tau+C)) - 1)
+    # plus a restart cost per failure.
+    fails = np.exp(lam * (tau + ckpt_cost)) - 1.0
+    seg = (1.0 / lam) * fails + fails * restart_cost
+    n_seg = work / tau
+    return float(n_seg * seg)
+
+
+def gang_failure_rate(lams: Sequence[float]) -> float:
+    """A gang-scheduled job fails when *any* member fails: rates add."""
+    return float(np.sum(np.asarray(lams, dtype=np.float64)))

@@ -1,0 +1,164 @@
+"""Cluster state visible to the orchestrator.
+
+Mirrors the bookkeeping structures of the paper (Table II):
+  ED_info   — total and free memory on each edge device
+  M_info    — which model artifacts are cached on each device (LRU order)
+  Task_info — number of running tasks of each type on each device
+  T_alloc   — "the allocation of each task and the estimated time it will be
+               on that edge device", so the orchestrator "can calculate the
+               number of running tasks on each device at a certain time by a
+               simple summation" (§IV-A).
+
+``T_alloc`` is realised as a time-bucketed occupancy tensor
+``alloc[device, task_type, bucket]`` so that Eq. (1) estimates at any time t
+are O(1) slices; the summation the paper describes is a range-add here.
+
+The same structures describe a fleet of TPU pods to the training runtime:
+"models" become checkpoint shards / compiled-program caches, "memory"
+becomes HBM headroom, and task types become job classes.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .interference import InterferenceModel
+
+__all__ = ["Device", "ClusterState"]
+
+
+@dataclass
+class Device:
+    """One edge device (or pod)."""
+
+    did: int
+    cls: int                      # index into the device-class/profile table
+    mem_total: float              # H(ED) in bytes
+    lam: float                    # failure rate lambda (Table IV)
+    bandwidth: float              # link bandwidth B in bytes/s
+    join_time: float = 0.0
+    alive_until: float = float("inf")  # sampled ground-truth lifetime (sim only)
+
+    # dynamic state ------------------------------------------------------------
+    mem_free: float = 0.0
+    # model_id -> bytes; least-recently-used first (we evict from the front;
+    # the paper keeps MRU at the front and evicts from the end — same policy).
+    model_cache: "OrderedDict[str, float]" = field(default_factory=OrderedDict)
+
+    def init_dynamic(self) -> None:
+        self.mem_free = self.mem_total
+        self.model_cache = OrderedDict()
+
+    # -- model cache (Algorithm 1, lines 19-27) -------------------------------
+    def has_model(self, model_id: Optional[str]) -> bool:
+        return model_id is None or model_id in self.model_cache
+
+    def touch_model(self, model_id: str) -> None:
+        """moveFront(M(T_i)) — mark most recently used."""
+        self.model_cache.move_to_end(model_id)
+
+    def admit_model(self, model_id: str, size: float) -> bool:
+        """Upload a model, LRU-evicting (removeEnd) until it fits.
+
+        Returns False when the model cannot fit even on an empty device."""
+        if model_id in self.model_cache:
+            self.touch_model(model_id)
+            return True
+        if size > self.mem_total:
+            return False
+        while self.mem_free < size and self.model_cache:
+            _, evicted = self.model_cache.popitem(last=False)
+            self.mem_free += evicted
+        if self.mem_free < size:
+            return False
+        self.model_cache[model_id] = size
+        self.mem_free -= size
+        return True
+
+    def alive(self, now: float) -> bool:
+        return now < self.alive_until
+
+
+@dataclass
+class ClusterState:
+    """The orchestrator's view of the fleet + the profiled ED_mc table."""
+
+    devices: List[Device]
+    model: InterferenceModel
+    horizon: float = 300.0        # total simulated time covered by T_alloc
+    dt: float = 0.05              # T_alloc bucket width (seconds)
+
+    def __post_init__(self) -> None:
+        for d in self.devices:
+            d.init_dynamic()
+        self._classes = np.array([d.cls for d in self.devices], dtype=np.int64)
+        self._lams = np.array([d.lam for d in self.devices], dtype=np.float64)
+        self._bw = np.array([d.bandwidth for d in self.devices], dtype=np.float64)
+        self._mem_total = np.array(
+            [d.mem_total for d in self.devices], dtype=np.float64
+        )
+        self.n_buckets = int(np.ceil(self.horizon / self.dt)) + 1
+        # T_alloc: (devices, task types, time buckets)
+        self.alloc = np.zeros(
+            (len(self.devices), self.model.n_types, self.n_buckets),
+            dtype=np.float32,
+        )
+
+    # -- static fleet views ------------------------------------------------------
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    @property
+    def n_types(self) -> int:
+        return self.model.n_types
+
+    def classes(self) -> np.ndarray:
+        return self._classes
+
+    def lams(self) -> np.ndarray:
+        return self._lams
+
+    def bandwidths(self) -> np.ndarray:
+        return self._bw
+
+    def mem_totals(self) -> np.ndarray:
+        return self._mem_total
+
+    # -- T_alloc ------------------------------------------------------------------
+    def bucket(self, t: float) -> int:
+        return min(max(int(t / self.dt), 0), self.n_buckets - 1)
+
+    def add_interval(
+        self, did: int, ttype: int, t0: float, t1: float, w: float = 1.0
+    ) -> None:
+        """Record that a ``ttype`` task occupies device ``did`` over [t0, t1)."""
+        b0 = self.bucket(t0)
+        b1 = max(self.bucket(t1), b0 + 1)  # at least one bucket
+        self.alloc[did, ttype, b0:b1] += w
+
+    def counts_at(self, t: float) -> np.ndarray:
+        """Task_info snapshot at time t: (D, N) running-task counts.
+
+        Clipped at zero: the engine replaces provisional placement-time
+        intervals with actual execution intervals by subtraction, which can
+        transiently leave small negative residue in individual buckets."""
+        return np.maximum(self.alloc[:, :, self.bucket(t)], 0.0)
+
+    def device_counts_at(self, did: int, t: float) -> np.ndarray:
+        return self.alloc[did, :, self.bucket(t)]
+
+    # -- Eq. (1) across the fleet ---------------------------------------------
+    def estimate_exec(self, ttype: int, t: float) -> np.ndarray:
+        """(D,) expected execution latency of a new ``ttype`` task started at
+        time ``t`` on every device, given T_alloc."""
+        return self.model.estimate_devices(
+            self._classes, ttype, np.asarray(self.counts_at(t), dtype=np.float64)
+        )
+
+    def queue_len_at(self, t: float) -> np.ndarray:
+        """(D,) total running tasks per device (LAVEA's SQLF signal)."""
+        return np.asarray(self.counts_at(t), dtype=np.float64).sum(axis=1)

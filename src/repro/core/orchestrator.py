@@ -1,0 +1,295 @@
+"""IBDASH orchestration — faithful implementation of Algorithm 1.
+
+Given an application DAG, the current cluster state (T_alloc / ED_info /
+M_info) and the profiled interference table ED_mc, produce a placement
+``P(T_i)`` for every task that greedily minimises
+
+    L(T_i) = L(T_i)_{ED_p} + L(M(T_i))_{ED_p} + L(T_i)_d          (Eq. 2)
+
+subject to bandwidth and memory constraints, then reduces the predicted
+probability of failure by replicating tasks whose ``F(T_i)`` exceeds the
+threshold ``beta`` onto the next-best devices, for as long as the weighted
+joint score
+
+    WeightS = alpha * L~(T_i) + (1 - alpha) * F(T_i)              (line 29)
+
+keeps improving and the replication degree stays below ``gamma``.
+
+Notes on fidelity
+-----------------
+* Stage processing order, the per-task priority queue over devices, the LRU
+  model-cache maintenance (lines 19-27) and the replication loop
+  (lines 30-41) follow Algorithm 1 line by line.
+* ``F(T_i)`` uses the exponential availability model of §V-F: the device
+  must stay alive from the moment of allocation until the task's estimated
+  completion (stage offset + task latency), and — because PEDs depart
+  silently — the orchestrator does *not* get to condition on liveness at
+  task start, matching Fig. 7's unconditional availability curves.
+* The paper's WeightS mixes seconds with a probability; we normalise the
+  latency term by the best candidate latency for the task so that ``alpha``
+  sweeps the same [0, 1] range as the paper's Fig. 12a.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .availability import prob_fail_during
+from .cluster import ClusterState
+from .dag import AppDAG
+
+__all__ = ["Replica", "TaskPlacement", "Placement", "Scheduler", "IBDASH"]
+
+
+@dataclass
+class Replica:
+    """One placed copy of a task."""
+
+    did: int
+    est_exec: float          # L(T_i)_{ED_p}: execution only (Eq. 1)
+    est_upload: float        # L(M(T_i))_{ED_p}
+    est_transfer: float      # L(T_i)_d
+    pred_fail: float         # F(T_i) for this device
+
+    @property
+    def est_total(self) -> float:
+        return self.est_exec + self.est_upload + self.est_transfer
+
+
+@dataclass
+class TaskPlacement:
+    task: str
+    ttype: int
+    replicas: List[Replica]              # primary first
+    est_start: float                     # offset from app arrival (stage barrier)
+    # Estimated task latency = the primary replica's total: replicas start
+    # concurrently and the task completes on the FIRST success, so extra
+    # replicas cost fleet capacity (interference), not direct task latency.
+    est_latency: float
+
+    @property
+    def pred_fail(self) -> float:
+        """Combined failure probability: every replica must fail."""
+        p = 1.0
+        for r in self.replicas:
+            p *= r.pred_fail
+        return p
+
+
+@dataclass
+class Placement:
+    app_name: str
+    tasks: Dict[str, TaskPlacement]
+    est_latency: float                   # L(G) = sum of stage maxima (Eq. 3)
+    feasible: bool = True
+    infeasible_task: Optional[str] = None
+
+    @property
+    def pred_app_fail(self) -> float:
+        """P_f(G) = 1 - prod_i (1 - F(T_i))   (Eq. 4, independence approx)."""
+        p = 1.0
+        for tp in self.tasks.values():
+            p *= 1.0 - tp.pred_fail
+        return 1.0 - p
+
+    def n_replicas(self) -> int:
+        return sum(len(tp.replicas) - 1 for tp in self.tasks.values())
+
+
+class Scheduler:
+    """Interface shared by IBDASH and every baseline.
+
+    ``place`` may mutate cluster state: it records provisional occupancy
+    intervals in T_alloc (exactly the paper's bookkeeping) and admits model
+    uploads into the per-device LRU caches."""
+
+    name: str = "base"
+
+    def place(self, app: AppDAG, cluster: ClusterState, now: float) -> Placement:
+        raise NotImplementedError
+
+    # -- shared helpers ---------------------------------------------------------
+    @staticmethod
+    def transfer_latency(
+        app: AppDAG, task: str, did: int, chosen: Dict[str, TaskPlacement],
+        bandwidth: float,
+    ) -> float:
+        """L(T_i)_d: move each parent's output from its primary device."""
+        total = 0.0
+        for dep in app.tasks[task].deps:
+            parent = chosen.get(dep)
+            if parent is None:
+                continue
+            if parent.replicas and parent.replicas[0].did != did:
+                total += app.tasks[dep].out_bytes / bandwidth
+        return total
+
+    @staticmethod
+    def upload_latency(
+        app: AppDAG, task: str, device, bandwidth: float
+    ) -> float:
+        """L(M(T_i)): model upload when the artifact is not cached."""
+        spec = app.tasks[task]
+        if spec.model_id is None or device.has_model(spec.model_id):
+            return 0.0
+        return spec.model_bytes / bandwidth
+
+    @staticmethod
+    def commit(
+        app: AppDAG,
+        cluster: ClusterState,
+        now: float,
+        placements: Dict[str, TaskPlacement],
+    ) -> Placement:
+        """Record occupancy intervals + model-cache effects for a finished
+        placement and assemble the Placement result."""
+        est_latency = 0.0
+        stage_offsets: Dict[int, float] = {}
+        offset = 0.0
+        for si, stage in enumerate(app.stages):
+            stage_offsets[si] = offset
+            stage_lat = 0.0
+            for tname in stage:
+                tp = placements.get(tname)
+                if tp is None:
+                    continue
+                stage_lat = max(stage_lat, tp.est_latency)
+            offset += stage_lat
+        est_latency = offset
+        for tname, tp in placements.items():
+            spec = app.tasks[tname]
+            start = now + tp.est_start
+            for rep in tp.replicas:
+                cluster.add_interval(
+                    rep.did, spec.ttype, start, start + rep.est_total
+                )
+                dev = cluster.devices[rep.did]
+                if spec.model_id is not None:
+                    dev.admit_model(spec.model_id, spec.model_bytes)
+        return Placement(app_name=app.name, tasks=placements, est_latency=est_latency)
+
+
+@dataclass
+class IBDASHConfig:
+    alpha: float = 0.5     # joint optimisation weight (Eq. 5)
+    beta: float = 0.1      # probability-of-failure threshold
+    gamma: int = 3         # replication degree cap
+    # When True the orchestrator drops devices whose *predicted* availability
+    # is below ``avail_floor`` from the candidate set entirely (a beyond-paper
+    # guard; disabled by default to stay faithful).
+    avail_floor: float = 0.0
+
+
+class IBDASH(Scheduler):
+    """Algorithm 1."""
+
+    name = "ibdash"
+
+    def __init__(self, config: Optional[IBDASHConfig] = None):
+        self.cfg = config or IBDASHConfig()
+
+    def place(self, app: AppDAG, cluster: ClusterState, now: float) -> Placement:
+        cfg = self.cfg
+        placements: Dict[str, TaskPlacement] = {}
+        bw = cluster.bandwidths()
+        lams = cluster.lams()
+        stage_offset = 0.0
+
+        mem_total = cluster.mem_totals()
+        join = np.array([d.join_time for d in cluster.devices])
+        n_dev = cluster.n_devices
+
+        for si, stage in enumerate(app.stages):                 # line 3
+            stage_latency = 0.0
+            for tname in stage:                                 # line 4
+                spec = app.tasks[tname]
+                t_start = now + stage_offset
+                # Eq. (1) for every device at the task's estimated start
+                # (lines 5-6, vectorised over the fleet).
+                exec_lat = cluster.estimate_exec(spec.ttype, t_start)
+
+                # lines 7-10: model upload latency where M(T_i) is missing.
+                up = np.zeros(n_dev)
+                if spec.model_id is not None:
+                    for did in range(n_dev):
+                        if not cluster.devices[did].has_model(spec.model_id):
+                            up[did] = spec.model_bytes / bw[did]
+                # lines 11-14: input data transfer from parents' devices.
+                tr = np.zeros(n_dev)
+                for dep in spec.deps:
+                    parent = placements.get(dep)
+                    if parent is None or not parent.replicas:
+                        continue
+                    pdid = parent.replicas[0].did
+                    add = app.tasks[dep].out_bytes / bw
+                    add[pdid] = 0.0
+                    tr += add
+                total = exec_lat + up + tr                      # line 15
+
+                # memory constraint H(T_i) <= H(ED_p) after LRU eviction of
+                # cached models (lines 20-23 make cache space reclaimable, so
+                # the binding constraint is total memory).
+                feasible = mem_total >= (spec.mem_bytes + spec.model_bytes)
+                if cfg.avail_floor > 0.0:
+                    feasible &= np.exp(-lams * (t_start - join)) >= cfg.avail_floor
+                if not feasible.any():
+                    return Placement(
+                        app_name=app.name, tasks=placements, est_latency=0.0,
+                        feasible=False, infeasible_task=tname,
+                    )
+
+                # F(T_i): device must survive from allocation until the
+                # task's estimated completion (it departs silently, so the
+                # orchestrator cannot condition on liveness at start).
+                window = (t_start - join) + total
+                pf = 1.0 - np.exp(-lams * window)
+
+                # line 16-18: priority queue == ascending order over L(T_i).
+                cand = np.flatnonzero(feasible)
+                order = cand[np.argsort(total[cand], kind="stable")]
+
+                def mk(did: int) -> Replica:
+                    return Replica(
+                        did=int(did), est_exec=float(exec_lat[did]),
+                        est_upload=float(up[did]), est_transfer=float(tr[did]),
+                        pred_fail=float(pf[did]),
+                    )
+
+                best = mk(order[0])                             # line 18
+                best_total = float(total[order[0]])
+                l_ref = max(best_total, 1e-9)
+                replicas = [best]
+                comb_fail = best.pred_fail
+                # line 29: weighted joint score, latency normalised by the
+                # best candidate so alpha sweeps [0,1] meaningfully.
+                weight_s = cfg.alpha * (best_total / l_ref) + (1 - cfg.alpha) * comb_fail
+
+                t_rep = 0
+                qi = 1
+                while comb_fail >= cfg.beta and t_rep < cfg.gamma and qi < order.size:  # line 30
+                    did = order[qi]                             # line 31
+                    qi += 1
+                    cand_total = float(total[did])
+                    new_fail = comb_fail * float(pf[did])
+                    weight_new = cfg.alpha * (cand_total / l_ref) + (1 - cfg.alpha) * new_fail
+                    if weight_new <= weight_s:                  # line 34
+                        replicas.append(mk(did))                # line 35
+                        comb_fail = new_fail
+                        weight_s = weight_new
+                        t_rep += 1                              # line 37
+                    else:
+                        break                                   # line 39
+
+                tp = TaskPlacement(
+                    task=tname,
+                    ttype=spec.ttype,
+                    replicas=replicas,
+                    est_start=stage_offset,
+                    est_latency=replicas[0].est_total,
+                )
+                placements[tname] = tp                          # line 42
+                stage_latency = max(stage_latency, tp.est_latency)  # line 44
+            stage_offset += stage_latency
+        return self.commit(app, cluster, now, placements)       # line 46/48

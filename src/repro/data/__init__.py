@@ -1,0 +1,5 @@
+"""Data pipeline: deterministic synthetic LM streams + sharded host loading."""
+from .synthetic import SyntheticLM, batch_specs
+from .pipeline import Prefetcher, shard_batch
+
+__all__ = ["SyntheticLM", "batch_specs", "Prefetcher", "shard_batch"]

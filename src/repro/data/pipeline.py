@@ -1,0 +1,74 @@
+"""Host-side input pipeline: background prefetch + device placement.
+
+``Prefetcher`` overlaps host batch synthesis/IO with device compute (a
+single producer thread and a bounded queue — the standard input-pipeline
+pattern).  ``shard_batch`` places a global host batch onto the mesh
+according to the step function's input shardings.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, Iterable, Iterator, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["Prefetcher", "shard_batch"]
+
+
+def shard_batch(batch: Dict[str, np.ndarray], shardings: Dict[str, Any]):
+    """Place host arrays onto devices per the given NamedShardings."""
+    return {
+        k: jax.device_put(v, shardings[k]) if k in shardings else jax.device_put(v)
+        for k, v in batch.items()
+    }
+
+
+class Prefetcher:
+    """Wrap an iterator with a background producer thread + bounded queue."""
+
+    _SENTINEL = object()
+
+    def __init__(self, it: Iterable, depth: int = 2,
+                 shardings: Optional[Dict[str, Any]] = None):
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._shardings = shardings
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._produce, args=(iter(it),), daemon=True
+        )
+        self._stopped = threading.Event()
+        self._thread.start()
+
+    def _produce(self, it: Iterator):
+        try:
+            for item in it:
+                if self._stopped.is_set():
+                    return
+                if self._shardings is not None:
+                    item = shard_batch(item, self._shardings)
+                self._q.put(item)
+        except BaseException as e:  # surfaced on next __next__
+            self._err = e
+        finally:
+            self._q.put(self._SENTINEL)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._SENTINEL:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stopped.set()
+        while not self._q.empty():
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots (pl.pallas_call + explicit
+BlockSpec VMEM tiling), each with a jit'd wrapper (ops.py) and a pure-jnp
+oracle (ref.py):
+
+  flash_attention  blocked online-softmax GQA attention (train/prefill)
+  flash_decode     single-token cache-streaming GQA attention (serve)
+  rwkv6_scan       chunked RWKV6 WKV recurrence (SSM train/prefill)
+"""
+from .ops import attention, decode_attention, default_impl, rwkv6
+
+__all__ = ["attention", "decode_attention", "rwkv6", "default_impl"]

@@ -1,0 +1,74 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``impl`` selection:
+  "auto"              pallas on TPU, reference elsewhere (this CPU container)
+  "pallas"            compiled Pallas kernel (TPU)
+  "pallas_interpret"  Pallas kernel body executed in Python (correctness on CPU)
+  "ref"               pure-jnp oracle
+
+Model code calls these wrappers; the dry-run lowers the ref path (identical
+math, XLA-countable FLOPs) while TPU deployments flip ``impl='pallas'``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .flash_attention import flash_attention as _flash_attention
+from .flash_decode import flash_decode as _flash_decode
+from .rwkv6_scan import rwkv6_scan as _rwkv6_scan
+
+__all__ = ["attention", "decode_attention", "rwkv6", "default_impl"]
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "impl", "block_q", "block_k"))
+def attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+    causal: bool = True, window: Optional[int] = None,
+    impl: str = "auto", block_q: int = 128, block_k: int = 128,
+) -> jnp.ndarray:
+    impl = default_impl() if impl == "auto" else impl
+    if impl == "ref":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window)
+    return _flash_attention(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+@partial(jax.jit, static_argnames=("impl", "block_k"))
+def decode_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, lengths: jnp.ndarray, *,
+    impl: str = "auto", block_k: int = 256,
+) -> jnp.ndarray:
+    impl = default_impl() if impl == "auto" else impl
+    if impl == "ref":
+        return _ref.decode_attention_ref(q, k, v, lengths)
+    return _flash_decode(
+        q, k, v, lengths, block_k=block_k,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+@partial(jax.jit, static_argnames=("impl", "chunk"))
+def rwkv6(
+    r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+    u: jnp.ndarray, S0: jnp.ndarray, *,
+    impl: str = "auto", chunk: int = 64,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    impl = default_impl() if impl == "auto" else impl
+    if impl == "ref":
+        return _ref.rwkv6_ref(r, k, v, w, u, S0)
+    return _rwkv6_scan(
+        r, k, v, w, u, S0, chunk=chunk,
+        interpret=(impl == "pallas_interpret"),
+    )

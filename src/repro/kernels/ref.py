@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each function is the mathematical ground truth the kernels are validated
+against (tests sweep shapes/dtypes and assert_allclose).  They are also the
+portable fallback implementation the model uses on non-TPU backends.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["attention_ref", "decode_attention_ref", "rwkv6_ref"]
+
+
+def attention_ref(
+    q: jnp.ndarray,            # (B, S, Hq, D)
+    k: jnp.ndarray,            # (B, S, Hk, D)
+    v: jnp.ndarray,            # (B, S, Hk, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Naive GQA attention (full S x S score materialisation)."""
+    B, S, Hq, D = q.shape
+    Hk = k.shape[2]
+    g = Hq // Hk
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qg = q.reshape(B, S, Hk, g, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), dtype=bool)
+    if causal:
+        mask &= pos[None, :] <= pos[:, None]
+    if window is not None:
+        mask &= pos[None, :] > pos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return out.reshape(B, S, Hq, D)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,            # (B, Hq, D)       single query token
+    k: jnp.ndarray,            # (B, C, Hk, D)    cache
+    v: jnp.ndarray,            # (B, C, Hk, D)
+    lengths: jnp.ndarray,      # (B,) valid cache lengths
+    *,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Naive single-token GQA decode over a (possibly padded) KV cache."""
+    B, Hq, D = q.shape
+    C, Hk = k.shape[1], k.shape[2]
+    g = Hq // Hk
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qg = q.reshape(B, Hk, g, D)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(C)[None, :] < lengths[:, None]          # (B, C)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w, v)
+    return out.reshape(B, Hq, D)
+
+
+def rwkv6_ref(
+    r: jnp.ndarray,            # (B, T, H, N)
+    k: jnp.ndarray,            # (B, T, H, N)
+    v: jnp.ndarray,            # (B, T, H, N)
+    w: jnp.ndarray,            # (B, T, H, N) per-channel decay in (0, 1)
+    u: jnp.ndarray,            # (H, N) bonus
+    S0: jnp.ndarray,           # (B, H, N, N) initial state [k-dim, v-dim]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact sequential RWKV6 WKV recurrence:
+
+        y_t = r_t . (S_{t-1} + u * k_t (x) v_t)
+        S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+    """
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + u[..., :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    f32 = jnp.float32
+    rs = jnp.moveaxis(r, 1, 0).astype(f32)
+    ks = jnp.moveaxis(k, 1, 0).astype(f32)
+    vs = jnp.moveaxis(v, 1, 0).astype(f32)
+    ws = jnp.moveaxis(w, 1, 0).astype(f32)
+    S_T, ys = jax.lax.scan(step, S0.astype(f32), (rs, ks, vs, ws))
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), S_T

@@ -1,0 +1,27 @@
+"""Launch layer: production meshes, sharding rules, the multi-pod dry-run,
+roofline analysis and the train/serve drivers.
+
+NOTE: never import ``repro.launch.dryrun`` from library code — it sets
+``XLA_FLAGS`` for 512 host devices at import time (by design, for the
+dry-run CLI only).
+"""
+from .mesh import dp_axes, make_host_mesh, make_production_mesh, mesh_axis_sizes
+from .sharding import (
+    batch_shardings,
+    cache_shardings,
+    param_pspec,
+    param_shardings,
+    replicated,
+)
+
+__all__ = [
+    "make_production_mesh",
+    "make_host_mesh",
+    "dp_axes",
+    "mesh_axis_sizes",
+    "param_pspec",
+    "param_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "replicated",
+]

@@ -1,0 +1,534 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialisation, and the dry-run needs 512 placeholder host devices so
+``jax.make_mesh`` can build the production meshes.  Everything else (smoke
+tests, benches) sees the real single CPU device because this module is the
+only place the flag is set.
+
+Per cell this script:
+  1. builds the exact published config + ShapeDtypeStruct inputs
+     (``input_specs`` — no allocation),
+  2. ``jax.jit(step, in_shardings, out_shardings).lower(...).compile()``
+     under the production mesh,
+  3. records ``memory_analysis()`` (fits-in-HBM proof),
+     ``cost_analysis()`` (FLOPs / bytes) and the per-kind collective bytes
+     parsed from the optimized HLO — the roofline inputs (EXPERIMENTS.md).
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out dryrun_results.json
+Variant flags (--remat/--dispatch/--xent-chunk/--compression/--opt) tag the
+cell key, supporting the §Perf hillclimb before/after comparisons.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCHS, get_config
+from ..configs.shapes import SHAPES, ShapeSpec, cell_applicable
+from ..data.synthetic import batch_specs
+from ..models.transformer import LM
+from ..optim.optimizers import Adafactor, AdamW
+from ..train.step import make_train_step
+from .mesh import make_production_mesh
+from .sharding import (
+    batch_shardings,
+    cache_shardings,
+    param_pspec,
+    param_shardings,
+    replicated,
+    tree_shardings,
+)
+
+__all__ = ["run_cell", "input_specs", "main", "collective_bytes_from_hlo"]
+
+# Big configs use Adafactor (factored second moments) so optimizer state
+# fits 16 GB/chip; everything else uses AdamW.
+ADAFACTOR_ARCHS = {"deepseek-v3-671b", "command-r-plus-104b", "qwen2-vl-72b"}
+
+
+def pick_optimizer(arch: str, name: str = "auto"):
+    if name == "adamw" or (name == "auto" and arch not in ADAFACTOR_ARCHS):
+        return AdamW(lr=3e-4, state_dtype="bfloat16")
+    return Adafactor(lr=1e-3)
+
+
+def input_specs(cfg, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    if shape.kind == "train":
+        return batch_specs(cfg, shape.global_batch, shape.seq_len, mode="train")
+    if shape.kind == "prefill":
+        return batch_specs(cfg, shape.global_batch, shape.seq_len, mode="prefill")
+    # decode: one new token against a seq_len cache
+    B = shape.global_batch
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+    if cfg.needs_position_ids:
+        specs["position_ids"] = jax.ShapeDtypeStruct((3, B, 1), jnp.int32)
+    return specs
+
+
+_SHAPE_RE = re.compile(r"\b(pred|s4|s8|s16|s32|u8|u16|u32|u64|f8\w*|bf16|f16|f32|f64|c64|c128)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, Any]:
+    """Sum result-shape bytes of every collective op in optimized HLO.
+
+    These are PER-DEVICE bytes (post-SPMD-partitioning HLO is the per-device
+    program).  Fusion-internal ops don't occur for collectives, so a simple
+    line scan is exact for op *instances*."""
+    out = {k: {"bytes": 0, "count": 0} for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?\S+\s*=\s*(\(.*?\)|\S+\[\S*\]\S*)\s+(\S+)\(", ls)
+        if not m:
+            continue
+        opname = m.group(2)
+        for kind in _COLL_KINDS:
+            if opname == kind or opname.startswith(kind + "-"):
+                out[kind]["bytes"] += _shape_bytes(m.group(1))
+                out[kind]["count"] += 1
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items() if isinstance(v, dict))
+    return out
+
+
+def _opt_state_shardings(opt_sds, mesh, mode="train"):
+    def spec_fn(path_str: str, shape, mesh):
+        # m/v mirror the param tree: strip the state prefix and reuse rules
+        stripped = re.sub(r"^(m|v)/", "", path_str)
+        stripped = re.sub(r"/v$|/vr$|/vc$", "", stripped)
+        if path_str.endswith(("/vr", "/vc")) or len(shape) == 0:
+            return jax.sharding.PartitionSpec()
+        return param_pspec(stripped, shape, mesh, mode=mode)
+
+    return tree_shardings(opt_sds, mesh, spec_fn)
+
+
+def make_cell_config(arch: str, shape: ShapeSpec, *,
+                     dispatch: Optional[str] = None, remat: str = "block",
+                     xent_chunk: int = 0, kv_dtype: Optional[str] = None,
+                     group_size: int = 0):
+    overrides: Dict[str, Any] = {"dtype": "bfloat16"}
+    if shape.kind == "train":
+        overrides["remat"] = remat
+        overrides["xent_chunk"] = xent_chunk
+    if kv_dtype:
+        overrides["kv_dtype"] = kv_dtype
+    cfg = get_config(arch, **overrides)
+    if cfg.moe is not None and (dispatch or group_size):
+        moe_over = {}
+        if dispatch:
+            moe_over["dispatch"] = dispatch
+        if group_size:
+            moe_over["group_size"] = group_size
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, **moe_over))
+    return cfg
+
+
+def probe_configs(cfg):
+    """Small UNROLLED configs whose per-segment layer counts span a basis,
+    for trip-count-aware cost extrapolation (XLA's cost_analysis counts a
+    while-loop body once, so the full compile underreports scanned work).
+
+    Returns a list of configs; the caller extrapolates linearly in the
+    segment counts to the true config."""
+    probes = []
+
+    def mk(**kw):
+        c = dataclasses.replace(cfg, scan_unroll=True, **kw)
+        probes.append(c)
+
+    if cfg.family == "moe" and cfg.moe.n_dense_layers > 0:
+        moe1 = dataclasses.replace(cfg.moe, n_dense_layers=1)
+        moe2 = dataclasses.replace(cfg.moe, n_dense_layers=2)
+        mk(n_layers=2, moe=moe1)
+        mk(n_layers=3, moe=moe2)
+        mk(n_layers=3, moe=moe1)
+    elif cfg.family == "hybrid":
+        plen = len(cfg.recurrent.pattern)
+        tail = cfg.n_layers % plen
+        mk(n_layers=plen + tail)
+        mk(n_layers=2 * plen + tail)
+    else:
+        mk(n_layers=1)
+        mk(n_layers=2)
+    return probes
+
+
+def extrapolate_costs(probe_counts, probe_values, true_counts):
+    """Solve value = fixed + sum_i slope_i * counts_i (least squares; exact
+    in the identified directions) and predict at the true counts."""
+    A = np.array([[1.0] + list(c) for c in probe_counts], dtype=np.float64)
+    y = np.array(probe_values, dtype=np.float64)
+    coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+    pred = float(coef[0] + np.dot(coef[1:], np.array(true_counts, dtype=np.float64)))
+    return max(pred, 0.0)
+
+
+def build_lowerable(arch: str, shape_name: str, mesh, *,
+                    opt: str = "auto", dispatch: Optional[str] = None,
+                    remat: str = "block", xent_chunk: int = 0,
+                    compression: str = "none", microbatches: int = 1,
+                    infer_shard: str = "fsdp", kv_dtype: Optional[str] = None,
+                    group_size: int = 0, moe_shard: str = "fsdp",
+                    seq_shard: str = "sp", batch_override: int = 0, cfg=None):
+    """Returns (jitted_fn, example_args) ready to .lower(*args)."""
+    shape = SHAPES[shape_name]
+    if batch_override:
+        shape = dataclasses.replace(shape, global_batch=batch_override)
+    if cfg is None:
+        cfg = make_cell_config(arch, shape, dispatch=dispatch, remat=remat,
+                               xent_chunk=xent_chunk, kv_dtype=kv_dtype,
+                               group_size=group_size)
+    ok, reason = cell_applicable(cfg, shape)
+    if not ok:
+        raise SkipCell(reason)
+    model = LM(cfg)
+    # constrain the activation stream: batch over the dp axes
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from .sharding import _dp_for
+    dp = _dp_for(shape.global_batch, mesh)
+    if compression == "int8":
+        # inside the shard_map (manual over "pod") constraints must not
+        # reference the pod axis — batch is already pod-local there
+        dp = tuple(a for a in dp if a != "pod")
+    # Sequence parallelism: at block boundaries the (B,S,d) stream is sharded
+    # batch x sequence; with remat this shrinks saved residuals by the model-
+    # axis size (measured 292 GiB -> ~20 GiB on command-r-plus train_4k).
+    seq_ax = "model" if (shape.kind != "decode" and seq_shard == "sp"
+                         and shape.seq_len % mesh.shape["model"] == 0) else None
+    model.act_sharding = NamedSharding(mesh, P(dp if dp else None, seq_ax))
+    vshard = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+    model.logits_sharding = NamedSharding(mesh, P(dp if dp else None, None, vshard))
+    rng = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(model.init, rng)
+    # weight-stationary TP sharding for inference cells when requested
+    if shape.kind == "train":
+        pmode = "train_ep" if moe_shard == "ep_full" else "train"
+    else:
+        pmode = "infer" if infer_shard == "tp" else "train"
+    param_sh = param_shardings(params_sds, mesh, mode=pmode)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        optimizer = pick_optimizer(arch, opt)
+        opt_sds = jax.eval_shape(optimizer.init, params_sds)
+        opt_sh = _opt_state_shardings(opt_sds, mesh, mode=pmode)
+        batch_sh = batch_shardings(specs, mesh)
+        step = make_train_step(
+            model, optimizer, mesh=mesh,
+            grad_compression=compression, microbatches=microbatches,
+        )
+        if compression == "int8":
+            rng_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            fn = jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, batch_sh, replicated(mesh)),
+                out_shardings=(param_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            )
+            args = (params_sds, opt_sds, specs, rng_spec)
+        else:
+            fn = jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                out_shardings=(param_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            )
+            args = (params_sds, opt_sds, specs)
+        info = {"param_bytes_per_device": sharded_bytes_per_device(params_sds, param_sh, mesh),
+                "opt_bytes_per_device": sharded_bytes_per_device(opt_sds, opt_sh, mesh)}
+        return cfg, fn, args, info
+
+    if shape.kind == "prefill":
+        cache_sds = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len)
+        )
+        cache_sh = cache_shardings(cache_sds, mesh)
+        batch_sh = batch_shardings(specs, mesh)
+        fn = jax.jit(
+            model.prefill,
+            in_shardings=(param_sh, batch_sh, cache_sh),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(2,),
+        )
+        info = {"param_bytes_per_device": sharded_bytes_per_device(params_sds, param_sh, mesh),
+                "cache_bytes_per_device": sharded_bytes_per_device(cache_sds, cache_sh, mesh)}
+        return cfg, fn, (params_sds, specs, cache_sds), info
+
+    # decode
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len)
+    )
+    cache_sh = cache_shardings(cache_sds, mesh)
+    batch_sh = batch_shardings(
+        {k: v for k, v in specs.items() if k in ("tokens", "pos", "position_ids")}, mesh
+    )
+
+    if cfg.needs_position_ids:
+        def serve_step(params, tokens, pos, caches, position_ids):
+            return model.decode_step(params, tokens, pos, caches, position_ids)
+        fn = jax.jit(
+            serve_step,
+            in_shardings=(param_sh, batch_sh["tokens"], batch_sh["pos"],
+                          cache_sh, batch_sh["position_ids"]),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(3,),
+        )
+        args = (params_sds, specs["tokens"], specs["pos"], cache_sds,
+                specs["position_ids"])
+        info = {"param_bytes_per_device": sharded_bytes_per_device(params_sds, param_sh, mesh),
+                "cache_bytes_per_device": sharded_bytes_per_device(cache_sds, cache_sh, mesh)}
+        return cfg, fn, args, info
+    else:
+        def serve_step(params, tokens, pos, caches):
+            return model.decode_step(params, tokens, pos, caches)
+        fn = jax.jit(
+            serve_step,
+            in_shardings=(param_sh, batch_sh["tokens"], batch_sh["pos"], cache_sh),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(3,),
+        )
+        args = (params_sds, specs["tokens"], specs["pos"], cache_sds)
+    info = {"param_bytes_per_device": sharded_bytes_per_device(params_sds, param_sh, mesh),
+            "cache_bytes_per_device": sharded_bytes_per_device(cache_sds, cache_sh, mesh)}
+    return cfg, fn, args, info
+
+
+class SkipCell(Exception):
+    pass
+
+
+def sharded_bytes_per_device(shapes_tree, shardings_tree, mesh) -> float:
+    """Sum of leaf bytes divided by the #devices each leaf is sharded over
+    (replication across unused axes does NOT reduce per-device bytes)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 0.0
+    for leaf, sh in zip(jax.tree.leaves(shapes_tree), jax.tree.leaves(
+            shardings_tree, is_leaf=lambda x: hasattr(x, "spec"))):
+        denom = 1
+        for entry in sh.spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                denom *= sizes[a]
+        total += np.prod(leaf.shape) * jnp.dtype(leaf.dtype).itemsize / denom
+    return float(total)
+
+
+def _analyze(compiled) -> Dict[str, Any]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll,
+    }
+
+
+def _seg_counts(cfg) -> Tuple[int, ...]:
+    from ..models.transformer import build_segments
+    return tuple(s.n for s in build_segments(cfg))
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, probes: bool = True,
+             **variant) -> Dict[str, Any]:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(mesh.devices.shape))
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "chips": n_chips, "variant": {k: v for k, v in variant.items() if v not in (None, "none", 0, 1, "auto", "fsdp", "sp")},
+    }
+    try:
+        with mesh:
+            # ---- full compile: the dry-run proof (sharding + memory) --------
+            cfg, fn, args, info = build_lowerable(arch, shape_name, mesh, **variant)
+            lowered = fn.lower(*args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+            mem = compiled.memory_analysis()
+            full = _analyze(compiled)
+
+            # ---- probe compiles: trip-count-correct cost extrapolation ------
+            extrap: Dict[str, float] = {}
+            coll_extrap: Dict[str, Any] = {}
+            if variant.get("microbatches", 1) > 1:
+                # grad-accum scan body is counted once by cost_analysis; use
+                # the microbatches=1 sibling cell for flops — this cell is
+                # for the memory proof.
+                probes = False
+            if probes:
+                counts, values = [], []
+                for pcfg in probe_configs(cfg):
+                    _, pfn, pargs, _pi = build_lowerable(
+                        arch, shape_name, mesh, cfg=pcfg,
+                        **{k: v for k, v in variant.items() if k != "cfg"})
+                    pa = _analyze(pfn.lower(*pargs).compile())
+                    counts.append(_seg_counts(pcfg))
+                    values.append(pa)
+                true_counts = _seg_counts(cfg)
+                for key in ("flops", "bytes"):
+                    extrap[key] = extrapolate_costs(
+                        counts, [v[key] for v in values], true_counts)
+                coll_extrap = {"total_bytes": extrapolate_costs(
+                    counts, [v["coll"]["total_bytes"] for v in values], true_counts)}
+                for kind in _COLL_KINDS:
+                    coll_extrap[kind] = {
+                        "bytes": extrapolate_costs(
+                            counts, [v["coll"][kind]["bytes"] for v in values],
+                            true_counts),
+                        "count": extrapolate_costs(
+                            counts, [v["coll"][kind]["count"] for v in values],
+                            true_counts),
+                    }
+
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower - t0, 2),
+            "compile_s": round(t_compile - t_lower, 2),
+            # raw full-compile numbers (scan bodies counted once — see probes)
+            "flops_per_device_raw": full["flops"],
+            "bytes_per_device_raw": full["bytes"],
+            "collectives_raw": full["coll"],
+            # trip-count-corrected per-device numbers (the roofline inputs)
+            "flops_per_device": extrap.get("flops", full["flops"]),
+            "bytes_per_device": extrap.get("bytes", full["bytes"]),
+            "collectives": coll_extrap or full["coll"],
+            "memory": {
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "alias_size_in_bytes",
+                          "generated_code_size_in_bytes")
+                if hasattr(mem, k)
+            },
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "resident": info,
+        })
+    except SkipCell as e:
+        rec.update({"status": "skip", "reason": str(e)})
+    except Exception as e:  # failures here are bugs in the system
+        rec.update({"status": "fail", "error": f"{type(e).__name__}: {e}",
+                    "trace": traceback.format_exc()[-2000:]})
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def cell_key(arch, shape, mesh_kind, variant) -> str:
+    tag = ",".join(f"{k}={v}" for k, v in sorted(variant.items())
+                   if v not in (None, "none", 0, 1, "auto", "fsdp", "sp"))
+    return f"{arch}|{shape}|{mesh_kind}" + (f"|{tag}" if tag else "")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true", help="run the full grid")
+    ap.add_argument("--out", default=None, help="incremental JSON results path")
+    ap.add_argument("--opt", default="auto", choices=("auto", "adamw", "adafactor"))
+    ap.add_argument("--dispatch", default=None, choices=(None, "einsum", "sort"))
+    ap.add_argument("--remat", default="block", choices=("none", "block", "dots"))
+    ap.add_argument("--xent-chunk", type=int, default=0)
+    ap.add_argument("--compression", default="none", choices=("none", "int8"))
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--infer-shard", default="fsdp", choices=("fsdp", "tp"))
+    ap.add_argument("--kv-dtype", default=None)
+    ap.add_argument("--group-size", type=int, default=0)
+    ap.add_argument("--moe-shard", default="fsdp", choices=("fsdp", "ep_full"))
+    ap.add_argument("--seq-shard", default="sp", choices=("sp", "none"))
+    ap.add_argument("--batch-override", type=int, default=0)
+    ap.add_argument("--force", action="store_true", help="recompute existing cells")
+    args = ap.parse_args()
+
+    variant = dict(opt=args.opt, dispatch=args.dispatch, remat=args.remat,
+                   xent_chunk=args.xent_chunk, compression=args.compression,
+                   microbatches=args.microbatches, infer_shard=args.infer_shard,
+                   kv_dtype=args.kv_dtype, group_size=args.group_size,
+                   moe_shard=args.moe_shard, seq_shard=args.seq_shard,
+                   batch_override=args.batch_override)
+
+    cells = []
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                for mk in meshes:
+                    cells.append((arch, shape, mk))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("need --arch and --shape (or --all)")
+        cells = [(args.arch, args.shape, mk) for mk in meshes]
+
+    results: Dict[str, Any] = {}
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    failures = 0
+    for arch, shape, mk in cells:
+        key = cell_key(arch, shape, mk, variant)
+        if key in results and results[key].get("status") == "ok" and not args.force:
+            print(f"[cached] {key}")
+            continue
+        print(f"[dryrun] {key} ...", flush=True)
+        rec = run_cell(arch, shape, mk, **variant)
+        results[key] = rec
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            extra = (f" flops/dev={rec['flops_per_device']:.3e}"
+                     f" coll={rec['collectives']['total_bytes']:.3e}B"
+                     f" compile={rec['compile_s']}s")
+        elif status == "fail":
+            failures += 1
+            extra = " " + rec["error"]
+        print(f"  -> {status}{extra}", flush=True)
+        if args.out:
+            tmp = args.out + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(results, f, indent=1, sort_keys=True)
+            os.replace(tmp, args.out)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

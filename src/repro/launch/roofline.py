@@ -1,0 +1,118 @@
+"""Roofline analysis over the dry-run grid (TPU v5e targets).
+
+Per (arch x shape x mesh) cell, derive the three roofline terms from the
+compiled artifact (per-device numbers; the dry-run already extrapolated
+scan trip counts):
+
+    compute    = HLO_flops_per_device / peak_flops          (197 TFLOP/s bf16)
+    memory     = HLO_bytes_per_device / hbm_bw              (819 GB/s)
+    collective = collective_bytes_per_device / ici_bw       (~50 GB/s/link)
+
+The step-time lower bound is max(terms); the dominant term is the
+bottleneck the §Perf loop iterates on.  Also reported:
+
+    MODEL_FLOPS  = k*N*D  (k = 6 train / 2 inference, N = params or active
+                   params for MoE, D = tokens processed)
+    useful_ratio = MODEL_FLOPS / (HLO_flops * chips) — how much of compiled
+                   compute is "useful" (catches remat/redundancy waste)
+    mfu_bound    = MODEL_FLOPS / (chips * peak * max(terms)) — the MFU this
+                   cell could reach if it hit its own roofline bound.
+
+Caveat (documented): "bytes accessed" comes from CPU-backend HLO whose
+fusion differs from TPU; it over-counts HBM traffic, so the memory term is
+an upper bound — cross-cell and before/after comparisons remain valid.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Any, Dict, List, Optional
+
+from ..configs.shapes import SHAPES
+
+__all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "roofline_row", "build_table", "main"]
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+def model_flops(rec: Dict[str, Any]) -> float:
+    shape = SHAPES[rec["shape"]]
+    n = rec.get("active_params") or rec.get("params")
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch          # decode: one token per sequence
+    return 2.0 * n * tokens
+
+
+def roofline_row(rec: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["chips"]
+    compute = rec["flops_per_device"] / PEAK_FLOPS
+    memory = rec["bytes_per_device"] / HBM_BW
+    coll = rec["collectives"]["total_bytes"] / ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(rec)
+    useful = mf / max(rec["flops_per_device"] * chips, 1e-30)
+    mfu_bound = mf / (chips * PEAK_FLOPS * max(bound, 1e-30))
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "dominant": dominant, "bound_s": bound,
+        "model_flops": mf, "useful_ratio": useful, "mfu_bound": mfu_bound,
+        "hbm_temp_gib": rec.get("memory", {}).get("temp_size_in_bytes", 0) / 2**30,
+        "variant": rec.get("variant", {}),
+    }
+
+
+def build_table(results: Dict[str, Any], mesh: str = "single",
+                include_variants: bool = False) -> List[Dict[str, Any]]:
+    rows = []
+    for key, rec in sorted(results.items()):
+        if rec.get("mesh") != mesh:
+            continue
+        if not include_variants and rec.get("variant"):
+            if set(rec["variant"].keys()) - {"remat"}:
+                continue
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def format_table(rows: List[Dict[str, Any]]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+           f"{'collect':>9s} {'dominant':>10s} {'useful':>7s} {'mfu<=':>6s}")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        out.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['compute_s']:9.3g} "
+            f"{r['memory_s']:9.3g} {r['collective_s']:9.3g} "
+            f"{r['dominant']:>10s} {r['useful_ratio']:7.2f} {r['mfu_bound']:6.2f}"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--results", default="dryrun_results.json")
+    ap.add_argument("--mesh", default="single", choices=("single", "multi"))
+    ap.add_argument("--variants", action="store_true")
+    args = ap.parse_args()
+    with open(args.results) as f:
+        results = json.load(f)
+    rows = build_table(results, mesh=args.mesh, include_variants=args.variants)
+    print(format_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,289 @@
+"""Sharding rules: parameter, optimizer-state, batch and cache PartitionSpecs.
+
+Strategy (per DESIGN.md §Distribution):
+  * "model" axis — tensor/expert parallelism: attention head projections,
+    FFN hidden dims, expert dim (or expert-FFN dim when E doesn't divide),
+    vocab dim of embeddings/heads, cache sequence dim (sequence-parallel
+    split-KV decode).
+  * "data" axis — batch + ZeRO-3/FSDP sharding of any large parameter on its
+    largest still-unsharded divisible dim.
+  * "pod" axis — pure data parallelism across pods (slow links carry only
+    gradient all-reduce; optionally int8-compressed).
+
+Every rule checks divisibility and silently degrades to replication on that
+dim (e.g. Whisper's vocab 51865 is odd, so its embedding shards d_model
+instead of vocab).  This keeps one rule-set valid across all 10 assigned
+architectures x 4 input shapes x both meshes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .mesh import dp_axes, mesh_axis_sizes
+
+__all__ = [
+    "param_pspec",
+    "param_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "tree_shardings",
+    "replicated",
+]
+
+# (regex over the flattened param path, trailing-dims spec template).
+# The template applies to the LAST len(template) dims; leading (scan-stack)
+# dims are None.  "data" entries are FSDP hints; all entries are dropped when
+# the dim is not divisible by the axis size.
+_PARAM_RULES: List[Tuple[str, Tuple[Optional[str], ...]]] = [
+    # embeddings / head: shard vocab on model, d on data(FSDP)
+    (r"embed/embedding$", ("model", "data")),
+    (r"lm_head/w$", ("data", "model")),
+    # MoE experts: (E, d, f) / (E, f, d) — expert parallelism on E,
+    # FSDP on the middle dim
+    (r"experts/wi$", ("model", "data", None)),
+    (r"experts/wg$", ("model", "data", None)),
+    (r"experts/wo$", ("model", None, "data")),
+    (r"router/w$", (None, None)),
+    (r"shared/wi/w$", ("data", "model")),
+    (r"shared/wg/w$", ("data", "model")),
+    (r"shared/wo/w$", ("model", "data")),
+    # attention projections (column-parallel in, row-parallel out)
+    (r"attn/wq/w$", ("data", "model")),
+    (r"attn/wk/w$", ("data", "model")),
+    (r"attn/wv/w$", ("data", "model")),
+    (r"attn/wo/w$", ("model", "data")),
+    (r"attn/w[qkv]/b$", ("model",)),
+    (r"self_attn/w[qkv]/w$", ("data", "model")),
+    (r"self_attn/wo/w$", ("model", "data")),
+    (r"cross_attn/w[qkv]/w$", ("data", "model")),
+    (r"cross_attn/wo/w$", ("model", "data")),
+    # MLA
+    (r"attn/wdq/w$", ("data", "model")),
+    (r"attn/wuq/w$", (None, "model")),
+    (r"attn/wdkv/w$", ("data", None)),
+    (r"attn/wuk/w$", (None, "model")),
+    (r"attn/wuv/w$", (None, "model")),
+    # dense MLP
+    (r"ffn/wi/w$", ("data", "model")),
+    (r"ffn/wg/w$", ("data", "model")),
+    (r"ffn/wo/w$", ("model", "data")),
+    # RWKV6
+    (r"block/w[rkvg]/w$", ("data", "model")),
+    (r"block/wo/w$", ("model", "data")),
+    (r"block/cm_k/w$", ("data", "model")),
+    (r"block/cm_v/w$", ("model", "data")),
+    (r"block/cm_r/w$", ("data", "model")),
+    (r"block/w[AB]$", (None, None)),
+    # RG-LRU
+    (r"rec/proj_x/w$", ("data", "model")),
+    (r"rec/proj_g/w$", ("data", "model")),
+    (r"rec/proj_out/w$", ("model", "data")),
+    (r"rec/conv$", (None, "model")),
+    (r"rec/w[ax]$", ("model", None, None)),
+]
+
+FSDP_MIN_SIZE = 1 << 22   # 4M elements: smaller leaves stay replicated on "data"
+
+# Inference ("weight-stationary") overrides: at decode, FSDP weight
+# all-gathers repeat EVERY token step and dwarf the math (measured: 26 GB
+# of f32 weight gathers per decode step on command-r-plus).  For serving,
+# weights shard over "model" only; MoE experts move their second shard to
+# the expert-FFN dim so cross-"data" traffic becomes activation-sized
+# partial-sum reductions instead of weight gathers.
+_INFER_RULES: List[Tuple[str, Tuple[Optional[str], ...]]] = [
+    (r"embed/embedding$", ("model", None)),
+    (r"lm_head/w$", (None, "model")),
+    (r"experts/wi$", ("model", None, "data")),
+    (r"experts/wg$", ("model", None, "data")),
+    (r"experts/wo$", ("model", "data", None)),
+    (r"router/w$", (None, None)),
+    (r"shared/wi/w$", (None, "model")),
+    (r"shared/wg/w$", (None, "model")),
+    (r"shared/wo/w$", ("model", None)),
+    (r"attn/w[qkv]/w$", (None, "model")),
+    (r"attn/wo/w$", ("model", None)),
+    (r"attn/w[qkv]/b$", ("model",)),
+    (r"self_attn/w[qkv]/w$", (None, "model")),
+    (r"self_attn/wo/w$", ("model", None)),
+    (r"cross_attn/w[qkv]/w$", (None, "model")),
+    (r"cross_attn/wo/w$", ("model", None)),
+    (r"attn/wdq/w$", (None, "model")),
+    (r"attn/wuq/w$", (None, "model")),
+    (r"attn/wdkv/w$", (None, None)),
+    (r"attn/wuk/w$", (None, "model")),
+    (r"attn/wuv/w$", (None, "model")),
+    (r"ffn/wi/w$", (None, "model")),
+    (r"ffn/wg/w$", (None, "model")),
+    (r"ffn/wo/w$", ("model", None)),
+    (r"block/w[rkvg]/w$", (None, "model")),
+    (r"block/wo/w$", ("model", None)),
+    (r"block/cm_k/w$", (None, "model")),
+    (r"block/cm_v/w$", ("model", None)),
+    (r"block/cm_r/w$", (None, "model")),
+    (r"block/w[AB]$", (None, None)),
+    (r"rec/proj_x/w$", (None, "model")),
+    (r"rec/proj_g/w$", (None, "model")),
+    (r"rec/proj_out/w$", ("model", None)),
+    (r"rec/conv$", (None, "model")),
+    (r"rec/w[ax]$", ("model", None, None)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# Fully-expert-sharded training mode ("train_ep"): the expert dim spans
+# model x data (256 experts over 256 chips) — expert weights never move;
+# routed tokens all-to-all to their expert's chip instead.  Activation-sized
+# traffic replaces weight-sized FSDP gathers (hillclimb #2, EXPERIMENTS.md).
+_EP_FULL_OVERRIDES: List[Tuple[str, Tuple[Any, ...]]] = [
+    (r"experts/wi$", (("model", "data"), None, None)),
+    (r"experts/wg$", (("model", "data"), None, None)),
+    (r"experts/wo$", (("model", "data"), None, None)),
+]
+
+
+def param_pspec(path_str: str, shape: Tuple[int, ...], mesh: Mesh,
+                mode: str = "train") -> P:
+    sizes = mesh_axis_sizes(mesh)
+    msize = sizes.get("model", 1)
+    dsize = sizes.get("data", 1)
+    nd = len(shape)
+
+    if mode == "train_ep":
+        for pat, tmpl in _EP_FULL_OVERRIDES:
+            if re.search(pat, path_str):
+                off = nd - len(tmpl)
+                spec = [None] * nd
+                if shape[off] % (msize * dsize) == 0:
+                    spec[off] = ("model", "data")
+                    return P(*spec)
+                break
+        mode = "train"
+
+    rules = _PARAM_RULES if mode == "train" else _INFER_RULES
+    template: Optional[Tuple[Optional[str], ...]] = None
+    for pat, tmpl in rules:
+        if re.search(pat, path_str):
+            template = tmpl
+            break
+    spec: List[Optional[str]] = [None] * nd
+    if template is not None and nd >= len(template):
+        off = nd - len(template)
+        for i, ax in enumerate(template):
+            if ax is None:
+                continue
+            axsize = msize if ax == "model" else dsize
+            if ax in spec:                       # axis already used
+                continue
+            if shape[off + i] % axsize == 0 and axsize > 1:
+                spec[off + i] = ax
+
+    # FSDP fallback (train only): big leaf with "data" unused -> shard the
+    # largest divisible dim
+    n_elem = int(np.prod(shape)) if shape else 0
+    if (mode == "train" and "data" not in spec and dsize > 1
+            and n_elem >= FSDP_MIN_SIZE):
+        order = sorted(range(nd), key=lambda i: -shape[i])
+        for i in order:
+            if spec[i] is None and shape[i] % dsize == 0:
+                spec[i] = "data"
+                break
+    return P(*spec)
+
+
+def param_shardings(params_shapes: Any, mesh: Mesh, mode: str = "train") -> Any:
+    """Tree of NamedShardings matching an eval_shape'd params pytree."""
+
+    def one(path, leaf):
+        return NamedSharding(mesh, param_pspec(_path_str(path), leaf.shape, mesh, mode))
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def tree_shardings(shapes: Any, mesh: Mesh, spec_fn) -> Any:
+    def one(path, leaf):
+        return NamedSharding(mesh, spec_fn(_path_str(path), leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, shapes)
+
+
+def _dp_for(batch: int, mesh: Mesh) -> Tuple[str, ...]:
+    """Largest prefix of the dp axes that divides the batch."""
+    axes = []
+    prod = 1
+    for a in dp_axes(mesh):
+        size = mesh_axis_sizes(mesh)[a]
+        if batch % (prod * size) == 0:
+            axes.append(a)
+            prod *= size
+    return tuple(axes)
+
+
+def batch_shardings(specs: Dict[str, jax.ShapeDtypeStruct], mesh: Mesh) -> Dict[str, NamedSharding]:
+    """Input-batch shardings: batch dim over ("pod","data"), rest replicated."""
+    out = {}
+    for k, sds in specs.items():
+        if k == "position_ids":            # (3, B, S)
+            dp = _dp_for(sds.shape[1], mesh)
+            spec = P(None, dp if dp else None)
+        else:                               # (B, ...)
+            dp = _dp_for(sds.shape[0], mesh)
+            spec = P(dp if dp else None)
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def cache_pspec(path_str: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Decode-cache sharding.
+
+    KV caches (L, B, C, hk, hd): batch over dp axes, the *sequence* dim C
+    over "model" — split-KV (sequence-parallel) decode, where partial
+    softmax stats reduce over the model axis.  Recurrent states shard their
+    width/head dims over "model" when divisible.
+    """
+    sizes = mesh_axis_sizes(mesh)
+    msize = sizes.get("model", 1)
+    nd = len(shape)
+    spec: List[Optional[str]] = [None] * nd
+    if nd >= 2:
+        dp = _dp_for(shape[1], mesh)
+        if dp:
+            spec[1] = dp if len(dp) > 1 else dp[0]
+    name = path_str.rsplit("/", 1)[-1]
+    if name in ("k", "v", "ckv", "krope") and nd >= 3:
+        if shape[2] % msize == 0 and msize > 1:
+            spec[2] = "model"
+    elif name == "pos" and nd >= 3:
+        if shape[2] % msize == 0 and msize > 1:
+            spec[2] = "model"
+    elif name in ("S",):                    # rwkv state (L,B,H,N,N): shard N(k-dim)
+        if nd >= 4 and shape[-2] % msize == 0 and msize > 1:
+            spec[-2] = "model"
+    elif name in ("h", "conv", "ts_tm", "ts_cm"):   # width-sharded recurrent state
+        if shape[-1] % msize == 0 and msize > 1:
+            spec[-1] = "model"
+    return P(*spec)
+
+
+def cache_shardings(cache_shapes: Any, mesh: Mesh) -> Any:
+    return tree_shardings(cache_shapes, mesh, cache_pspec)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

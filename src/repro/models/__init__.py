@@ -1,0 +1,16 @@
+"""Model substrate: configs, layers, attention (GQA/MLA), MoE, recurrent
+blocks (RWKV6 / RG-LRU) and the unified ``LM`` assembly."""
+from .config import MLAConfig, ModelConfig, MoEConfig, RecurrentConfig, reduced
+from .transformer import LM, Segment, build_segments, sinusoidal_embed
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "MLAConfig",
+    "RecurrentConfig",
+    "reduced",
+    "LM",
+    "Segment",
+    "build_segments",
+    "sinusoidal_embed",
+]

@@ -1,0 +1,299 @@
+"""Attention variants: GQA (full / local / cross) and DeepSeek-V3 MLA.
+
+Unified cache design
+--------------------
+A per-layer cache is a dict of arrays::
+
+    {"k": (B, C, Hk, D), "v": (B, C, Hk, D), "pos": (B, C) int32}
+
+``C`` is the cache capacity — the full context for global attention, or the
+window size for local attention, in which case the cache is a *ring buffer*
+indexed by ``position % window``.  ``pos`` stores the absolute position of
+each slot (-1 = empty), so masking is computed purely from positions:
+
+    valid(q, k) = (pos_k >= 0) & (pos_k <= pos_q) [& (pos_k > pos_q - w)]
+
+This one rule covers train (no cache), prefill (bulk write), decode (single
+write) and 500k-token sliding-window decode without special cases.
+
+MLA (Multi-head Latent Attention, arXiv:2412.19437 §2.1) caches only the
+compressed latent ``c_kv`` (+ the shared RoPE key), and decode runs in the
+*absorbed* form: scores and values are computed directly in latent space so
+per-token decode cost is O(H * rank), independent of head count re-expansion.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import Dense, apply_mrope, apply_rope, norm_apply, norm_init
+
+__all__ = [
+    "gqa_init",
+    "gqa_apply",
+    "mla_init",
+    "mla_apply",
+    "make_cache",
+    "make_mla_cache",
+]
+
+NEG_INF = -1e30
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+def gqa_init(rng, cfg: ModelConfig, cross: bool = False) -> Dict:
+    dt = _dt(cfg)
+    d, hq, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rq, rk, rv, ro = jax.random.split(rng, 4)
+    return {
+        "wq": Dense.init(rq, d, hq * hd, dt, bias=cfg.qkv_bias),
+        "wk": Dense.init(rk, d, hk * hd, dt, bias=cfg.qkv_bias),
+        "wv": Dense.init(rv, d, hk * hd, dt, bias=cfg.qkv_bias),
+        "wo": Dense.init(ro, hq * hd, d, dt, bias=False),
+    }
+
+
+def make_cache(cfg: ModelConfig, batch: int, capacity: int, n_layers: int,
+               dtype=None) -> Dict:
+    """Stacked-over-layers KV cache (leading axis = layer, for lax.scan)."""
+    dt = dtype or (jnp.dtype(cfg.kv_dtype) if cfg.kv_dtype else _dt(cfg))
+    hk, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((n_layers, batch, capacity, hk, hd), dtype=dt),
+        "v": jnp.zeros((n_layers, batch, capacity, hk, hd), dtype=dt),
+        "pos": jnp.full((n_layers, batch, capacity), -1, dtype=jnp.int32),
+    }
+
+
+def _mask_bias(pos_q: jnp.ndarray, pos_k: jnp.ndarray, causal: bool,
+               window: Optional[int]) -> jnp.ndarray:
+    """(B, S_q, S_k) additive f32 bias from absolute positions."""
+    valid = pos_k[:, None, :] >= 0
+    if causal:
+        valid &= pos_k[:, None, :] <= pos_q[:, :, None]
+    if window is not None:
+        valid &= pos_k[:, None, :] > (pos_q[:, :, None] - window)
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, bias, softcap: Optional[float]) -> jnp.ndarray:
+    """q: (B,Sq,Hk,G,D)  k/v: (B,Sk,Hk,D)  bias: (B,Sq,Sk)."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    logits = logits + bias[:, None, None, :, :]
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+
+
+def _ring_write(cache_leaf: jnp.ndarray, new: jnp.ndarray, slots: jnp.ndarray):
+    """Scatter ``new`` (B,S,...) into ``cache_leaf`` (B,C,...) at ``slots`` (B,S)."""
+    b_idx = jnp.arange(cache_leaf.shape[0])[:, None]
+    return cache_leaf.at[b_idx, slots].set(new.astype(cache_leaf.dtype))
+
+
+def gqa_apply(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jnp.ndarray,                      # (B, S, d)
+    positions: jnp.ndarray,              # (B, S) absolute positions
+    *,
+    cache: Optional[Dict] = None,        # per-layer cache slice (no layer axis)
+    cache_read_only: bool = False,       # decode-time cross-attn: K/V from cache
+    kv_x: Optional[jnp.ndarray] = None,  # cross-attention source (B, Sk, d)
+    kv_positions: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    position_ids: Optional[jnp.ndarray] = None,  # (3, B, S) for M-RoPE
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, S, d = x.shape
+    hq, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = hq // hk
+
+    q = Dense.apply(p["wq"], x).reshape(B, S, hq, hd)
+
+    if cache_read_only:
+        # Cross-attention decode: K/V were projected (un-roped, matching the
+        # kv_x write path) and cached at prefill; only Q is computed here.
+        assert cache is not None and kv_x is None
+        k, v, k_pos = cache["k"].astype(q.dtype), cache["v"].astype(q.dtype), cache["pos"]
+        new_cache = cache
+        bias = _mask_bias(positions, k_pos, causal=causal, window=window)
+        qg = q.reshape(B, S, hk, g, hd)
+        out = _sdpa(qg, k, v, bias, cfg.attn_logit_softcap)
+        return Dense.apply(p["wo"], out.reshape(B, S, hq * hd)), new_cache
+
+    src = x if kv_x is None else kv_x
+    k = Dense.apply(p["wk"], src).reshape(B, -1, hk, hd)
+    v = Dense.apply(p["wv"], src).reshape(B, -1, hk, hd)
+
+    k_pos = positions if kv_x is None else kv_positions
+    if cfg.rope != "none" and kv_x is None:
+        if cfg.rope == "mrope" and position_ids is not None:
+            q, k = apply_mrope(q, k, position_ids, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q, k = apply_rope(q, k, positions, cfg.rope_theta)
+
+    # Flash-attention kernel fast path: train/prefill-without-cache, causal,
+    # contiguous positions (the standard training layout).
+    if (cfg.attention_impl != "xla" and cache is None and kv_x is None
+            and causal and cfg.attn_logit_softcap is None and S > 1):
+        from ..kernels.flash_attention import flash_attention_trainable
+
+        bq = 128 if S % 128 == 0 else S
+        bk = 128 if S % 128 == 0 else S
+        out = flash_attention_trainable(
+            q, k, v, causal=True, window=window, block_q=bq, block_k=bk,
+            interpret=(cfg.attention_impl == "kernel_interpret"),
+        )
+        return Dense.apply(p["wo"], out.reshape(B, S, hq * hd)), None
+
+    new_cache = None
+    if cache is not None:
+        C = cache["k"].shape[1]
+        slots = k_pos % C if window is not None else jnp.clip(k_pos, 0, C - 1)
+        new_cache = {
+            "k": _ring_write(cache["k"], k, slots),
+            "v": _ring_write(cache["v"], v, slots),
+            "pos": _ring_write(cache["pos"], k_pos, slots),
+        }
+        # cache may be stored in a narrower dtype (e.g. fp8): read-cast back
+        k = new_cache["k"].astype(q.dtype)
+        v = new_cache["v"].astype(q.dtype)
+        k_pos = new_cache["pos"]
+
+    bias = _mask_bias(positions, k_pos, causal=causal and kv_x is None,
+                      window=window)
+    qg = q.reshape(B, S, hk, g, hd)
+    out = _sdpa(qg, k, v, bias, cfg.attn_logit_softcap)
+    out = out.reshape(B, S, hq * hd)
+    return Dense.apply(p["wo"], out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+def mla_init(rng, cfg: ModelConfig) -> Dict:
+    m = cfg.mla
+    dt = _dt(cfg)
+    d, H = cfg.d_model, cfg.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    r = jax.random.split(rng, 8)
+    return {
+        "wdq": Dense.init(r[0], d, m.q_lora_rank, dt),
+        "q_norm": {"scale": jnp.ones((m.q_lora_rank,), dtype=dt)},
+        "wuq": Dense.init(r[1], m.q_lora_rank, H * qk_head, dt),
+        "wdkv": Dense.init(r[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dt),
+        "kv_norm": {"scale": jnp.ones((m.kv_lora_rank,), dtype=dt)},
+        "wuk": Dense.init(r[3], m.kv_lora_rank, H * m.qk_nope_head_dim, dt),
+        "wuv": Dense.init(r[4], m.kv_lora_rank, H * m.v_head_dim, dt),
+        "wo": Dense.init(r[5], H * m.v_head_dim, d, dt),
+    }
+
+
+def make_mla_cache(cfg: ModelConfig, batch: int, capacity: int, n_layers: int,
+                   dtype=None) -> Dict:
+    m = cfg.mla
+    dt = dtype or _dt(cfg)
+    return {
+        "ckv": jnp.zeros((n_layers, batch, capacity, m.kv_lora_rank), dtype=dt),
+        "krope": jnp.zeros((n_layers, batch, capacity, m.qk_rope_head_dim), dtype=dt),
+        "pos": jnp.full((n_layers, batch, capacity), -1, dtype=jnp.int32),
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y.astype(x.dtype)) * scale
+
+
+def mla_apply(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    cache: Optional[Dict] = None,
+    absorbed: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """MLA attention.  ``absorbed=None`` auto-selects: expanded form for
+    prefill/train (S > 1), absorbed latent-space form for decode (S == 1)."""
+    m = cfg.mla
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dn, dr, dv, rank = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim, m.kv_lora_rank
+    if absorbed is None:
+        absorbed = S == 1 and cache is not None
+
+    # -- queries ------------------------------------------------------------------
+    cq = _rms(Dense.apply(p["wdq"], x), p["q_norm"]["scale"])
+    q = Dense.apply(p["wuq"], cq).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+
+    # -- compressed KV -------------------------------------------------------------
+    dkv = Dense.apply(p["wdkv"], x)
+    ckv = _rms(dkv[..., :rank], p["kv_norm"]["scale"])         # (B,S,rank)
+    k_rope_new = dkv[..., rank:]                               # (B,S,dr)
+
+    # RoPE: decoupled — applied to q_rope and the single shared k_rope.
+    q_rope, k_rope_new = apply_rope(
+        q_rope, k_rope_new[..., None, :], positions, cfg.rope_theta
+    )
+    k_rope_new = k_rope_new[..., 0, :]
+
+    k_pos = positions
+    if cache is not None:
+        C = cache["ckv"].shape[1]
+        slots = jnp.clip(k_pos, 0, C - 1)
+        cache = {
+            "ckv": _ring_write(cache["ckv"], ckv, slots),
+            "krope": _ring_write(cache["krope"], k_rope_new, slots),
+            "pos": _ring_write(cache["pos"], k_pos, slots),
+        }
+        ckv_all, k_rope_all, k_pos = cache["ckv"], cache["krope"], cache["pos"]
+    else:
+        ckv_all, k_rope_all = ckv, k_rope_new
+
+    bias = _mask_bias(positions, k_pos, causal=True, window=None)
+    scale = 1.0 / np.sqrt(dn + dr)
+    wuk = p["wuk"]["w"].reshape(rank, H, dn)
+    wuv = p["wuv"]["w"].reshape(rank, H, dv)
+
+    if absorbed:
+        # scores: q_nope^T k_nope = (W_uk^T q_nope)^T c_kv — stay in rank space
+        q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wuk)       # (B,S,H,rank)
+        s_nope = jnp.einsum("bshr,bkr->bhsk", q_lat, ckv_all,
+                            preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bshd,bkd->bhsk", q_rope, k_rope_all,
+                            preferred_element_type=jnp.float32)
+        logits = (s_nope + s_rope) * scale + bias[:, None, :, :]
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        ctx_lat = jnp.einsum("bhsk,bkr->bshr", w, ckv_all)       # (B,S,H,rank)
+        out = jnp.einsum("bshr,rhd->bshd", ctx_lat, wuv)         # (B,S,H,dv)
+    else:
+        k_nope = jnp.einsum("bkr,rhd->bkhd", ckv_all, wuk)       # (B,K,H,dn)
+        vv = jnp.einsum("bkr,rhd->bkhd", ckv_all, wuv)           # (B,K,H,dv)
+        s_nope = jnp.einsum("bshd,bkhd->bhsk", q_nope, k_nope,
+                            preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bshd,bkd->bhsk", q_rope, k_rope_all,
+                            preferred_element_type=jnp.float32)
+        logits = (s_nope + s_rope) * scale + bias[:, None, :, :]
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhsk,bkhd->bshd", w, vv)
+
+    out = out.reshape(B, S, H * dv)
+    return Dense.apply(p["wo"], out), cache

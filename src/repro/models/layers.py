@@ -1,0 +1,190 @@
+"""Shared neural-net layers: norms, gated MLPs, rotary embeddings.
+
+Pure-functional JAX: every layer is an ``init(rng, cfg) -> params`` plus an
+``apply(params, x) -> y`` pair operating on pytrees of jnp arrays, so the
+whole model works under ``jax.eval_shape`` (the multi-pod dry-run never
+materialises weights) and under ``jax.lax.scan`` over stacked layer params.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+__all__ = [
+    "Dense",
+    "dense_init",
+    "dense_apply",
+    "norm_init",
+    "norm_apply",
+    "mlp_init",
+    "mlp_apply",
+    "embed_init",
+    "rope_freqs",
+    "apply_rope",
+    "apply_mrope",
+    "activation",
+]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# -- dense ----------------------------------------------------------------------
+def dense_init(rng, in_dim: int, out_dim: int, dtype, bias: bool = False,
+               scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    w = (jax.random.normal(rng, (in_dim, out_dim), dtype=jnp.float32) * scale).astype(dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype=dtype)
+    return p
+
+
+def dense_apply(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+class Dense:
+    """Thin namespace so call-sites read ``Dense.init`` / ``Dense.apply``."""
+
+    init = staticmethod(dense_init)
+    apply = staticmethod(dense_apply)
+
+
+# -- normalisation ----------------------------------------------------------------
+def norm_init(cfg: ModelConfig, dim: Optional[int] = None):
+    dim = dim or cfg.d_model
+    dt = _dtype(cfg)
+    if cfg.norm == "nonparametric":        # OLMo-style non-parametric LN
+        return {}
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((dim,), dtype=dt)}
+    p = {"scale": jnp.ones((dim,), dtype=dt)}
+    if cfg.norm == "layernorm":            # with bias
+        p["bias"] = jnp.zeros((dim,), dtype=dt)
+    return p
+
+
+def norm_apply(cfg: ModelConfig, p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y.astype(x.dtype)
+    if "scale" in p:
+        y = y * p["scale"]
+    if "bias" in p:
+        y = y + p["bias"]
+    return y
+
+
+# -- activations / MLP -------------------------------------------------------------
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return partial(jax.nn.gelu, approximate=True)
+    if name == "relu2":  # squared ReLU (Nemotron / Minitron family)
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def mlp_init(rng, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    dt = _dtype(cfg)
+    r1, r2, r3 = jax.random.split(rng, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "wi": dense_init(r1, cfg.d_model, d_ff, dt),
+            "wg": dense_init(r2, cfg.d_model, d_ff, dt),
+            "wo": dense_init(r3, d_ff, cfg.d_model, dt),
+        }
+    return {
+        "wi": dense_init(r1, cfg.d_model, d_ff, dt),
+        "wo": dense_init(r3, d_ff, cfg.d_model, dt),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, p, x):
+    act = activation("gelu" if cfg.mlp == "geglu" else cfg.act)
+    h = dense_apply(p["wi"], x)
+    if "wg" in p:
+        h = act(dense_apply(p["wg"], x)) * h
+    else:
+        h = act(h)
+    return dense_apply(p["wo"], h)
+
+
+# -- embeddings ----------------------------------------------------------------------
+def embed_init(rng, vocab: int, dim: int, dtype):
+    w = (jax.random.normal(rng, (vocab, dim), dtype=jnp.float32) * 0.02).astype(dtype)
+    return {"embedding": w}
+
+
+# -- rotary embeddings ----------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float, positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for given integer positions.
+
+    positions: (..., S) int32 -> returns cos,sin of shape (..., S, head_dim//2).
+    """
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, n_heads, head_dim); cos/sin broadcastable to (..., S, 1, half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def apply_rope(q: jnp.ndarray, k: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Standard RoPE.  q: (B,S,Hq,D), k: (B,S,Hk,D), positions: (B,S)."""
+    cos, sin = rope_freqs(q.shape[-1], theta, positions)  # (B,S,half)
+    cos, sin = cos[..., None, :], sin[..., None, :]       # (B,S,1,half)
+    return _rotate(q, cos, sin), _rotate(k, cos, sin)
+
+
+def apply_mrope(
+    q: jnp.ndarray, k: jnp.ndarray, position_ids: jnp.ndarray,
+    theta: float, sections: Tuple[int, ...],
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Qwen2-VL multimodal RoPE (arXiv:2409.12191).
+
+    position_ids: (3, B, S) — temporal / height / width position per token.
+    The head_dim/2 frequency slots are split into ``sections`` (t, h, w) and
+    each section takes its angle from the corresponding position stream.
+    For pure text the three streams are identical and M-RoPE == RoPE.
+    """
+    half = q.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    cos_parts, sin_parts = [], []
+    lo = 0
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    for s, sec in enumerate(sections):
+        pos = position_ids[s].astype(jnp.float32)        # (B,S)
+        ang = pos[..., None] * inv[lo:lo + sec]           # (B,S,sec)
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+        lo += sec
+    cos = jnp.concatenate(cos_parts, axis=-1)[..., None, :]  # (B,S,1,half)
+    sin = jnp.concatenate(sin_parts, axis=-1)[..., None, :]
+    return _rotate(q, cos, sin), _rotate(k, cos, sin)

@@ -1,0 +1,314 @@
+"""Recurrent sequence-mixing blocks: RWKV6 (Finch) and RG-LRU (Griffin /
+RecurrentGemma).
+
+TPU adaptation notes (see DESIGN.md): the RG-LRU recurrence
+``h_t = a_t * h_{t-1} + b_t`` is elementwise-linear, so training/prefill use
+``jax.lax.associative_scan`` (log-depth, MXU-free) instead of a sequential
+CUDA scan kernel.  The RWKV6 state update is a per-head rank-1 outer-product
+accumulation with per-channel data-dependent decay; the exact sequential
+``lax.scan`` here is the reference semantics, and
+:mod:`repro.kernels.rwkv6_scan` provides the chunked Pallas kernel used on
+TPU for training/prefill.
+
+State layout (per layer, stacked over layers by the model):
+  rwkv6 : {"ts_tm": (B,d), "ts_cm": (B,d), "S": (B,H,N,N)}
+  rglru : {"conv": (B, conv_width-1, W), "h": (B, W)}
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import Dense
+
+__all__ = [
+    "rwkv6_init",
+    "rwkv6_state",
+    "rwkv6_apply",
+    "rglru_init",
+    "rglru_state",
+    "rglru_apply",
+    "rwkv6_mix_ref",
+]
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch, arXiv:2404.05892)
+# ---------------------------------------------------------------------------
+def rwkv6_init(rng, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    N = cfg.recurrent.head_size
+    H = d // N
+    r = jax.random.split(rng, 10)
+    lora = 64
+    scale = 1.0 / np.sqrt(d)
+
+    def mat(key, din, dout, s=None):
+        s = s if s is not None else 1.0 / np.sqrt(din)
+        return (jax.random.normal(key, (din, dout), dtype=jnp.float32) * s).astype(dt)
+
+    return {
+        # pre-norms for the two sub-blocks (RWKV uses LayerNorm; we use the
+        # config's norm so the block composes with any family)
+        "ln1": {"scale": jnp.ones((d,), dtype=dt), "bias": jnp.zeros((d,), dtype=dt)},
+        "ln2": {"scale": jnp.ones((d,), dtype=dt), "bias": jnp.zeros((d,), dtype=dt)},
+        # token-shift lerp coefficients (static part of ddlerp)
+        "mu": {k: jnp.full((d,), 0.5, dtype=dt) for k in ("r", "k", "v", "g", "w")},
+        "wr": {"w": mat(r[0], d, d)},
+        "wk": {"w": mat(r[1], d, d)},
+        "wv": {"w": mat(r[2], d, d)},
+        "wg": {"w": mat(r[3], d, d)},
+        "wo": {"w": mat(r[4], d, d)},
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(xw A) B))
+        "w0": jnp.full((d,), -2.0, dtype=jnp.float32),
+        "wA": mat(r[5], d, lora, s=0.01),
+        "wB": mat(r[6], lora, d, s=0.01),
+        "u": (jax.random.normal(r[7], (d,), dtype=jnp.float32) * 0.1).astype(jnp.float32),
+        # per-head group norm on the attention output
+        "ln_x": {"scale": jnp.ones((d,), dtype=dt), "bias": jnp.zeros((d,), dtype=dt)},
+        # channel mix
+        "mu_cm": {k: jnp.full((d,), 0.5, dtype=dt) for k in ("k", "r")},
+        "cm_k": {"w": mat(r[8], d, cfg.d_ff)},
+        "cm_v": {"w": mat(r[9], cfg.d_ff, d)},
+        "cm_r": {"w": mat(jax.random.fold_in(r[8], 7), d, d)},
+    }
+
+
+def rwkv6_state(cfg: ModelConfig, batch: int, n_layers: int) -> Dict:
+    d = cfg.d_model
+    N = cfg.recurrent.head_size
+    H = d // N
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "ts_tm": jnp.zeros((n_layers, batch, d), dtype=dt),
+        "ts_cm": jnp.zeros((n_layers, batch, d), dtype=dt),
+        "S": jnp.zeros((n_layers, batch, H, N, N), dtype=jnp.float32),
+    }
+
+
+def rwkv6_mix_ref(
+    r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+    u: jnp.ndarray, S0: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact sequential RWKV6 WKV recurrence (the pure-jnp oracle).
+
+    r,k,v,w: (B,S,H,N) — w is the per-channel decay in (0,1); u: (H,N);
+    S0: (B,H,N,N) state with layout [k-dim, v-dim].  Returns (y, S_T).
+    """
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                      # (B,H,N) each
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,N,N)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + u[..., :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    rs = jnp.moveaxis(r, 1, 0).astype(jnp.float32)
+    ks = jnp.moveaxis(k, 1, 0).astype(jnp.float32)
+    vs = jnp.moveaxis(v, 1, 0).astype(jnp.float32)
+    ws = jnp.moveaxis(w, 1, 0).astype(jnp.float32)
+    S_T, ys = jax.lax.scan(step, S0.astype(jnp.float32), (rs, ks, vs, ws))
+    return jnp.moveaxis(ys, 0, 1), S_T
+
+
+def _group_norm(x: jnp.ndarray, H: int, scale, bias, eps=1e-5):
+    """GroupNorm over each head's channels. x: (B,S,d)."""
+    B, S, d = x.shape
+    xh = x.reshape(B, S, H, d // H).astype(jnp.float32)
+    mu = xh.mean(axis=-1, keepdims=True)
+    var = xh.var(axis=-1, keepdims=True)
+    xn = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return xn.reshape(B, S, d).astype(x.dtype) * scale + bias
+
+
+def rwkv6_apply(
+    cfg: ModelConfig, p: Dict, x: jnp.ndarray, state: Optional[Dict],
+    mix_fn=None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Full RWKV6 block (pre-norms included):
+
+        x = x + time_mix(ln1(x));  x = x + channel_mix(ln2(x))
+
+    x: (B,S,d).  ``state=None`` means training (zero initial state, no state
+    returned).  Token-shift states hold the last *normed* token of each
+    sub-block's input, so decode continues exactly where prefill stopped.
+    ``mix_fn`` overrides the WKV inner loop (e.g. the Pallas chunked
+    kernel); defaults to the exact sequential reference.
+    """
+    B, S, d = x.shape
+    N = cfg.recurrent.head_size
+    H = d // N
+    mix = mix_fn or rwkv6_mix_ref
+    if mix_fn is None and cfg.attention_impl != "xla" and S > 1 and S % 16 == 0:
+        # chunked Pallas WKV kernel for train/prefill (oracle backward)
+        from ..kernels.rwkv6_scan import rwkv6_scan_trainable
+
+        def mix(r, k, v, w, u, S0, _interp=(cfg.attention_impl == "kernel_interpret")):
+            chunk = 64 if S % 64 == 0 else 16
+            return rwkv6_scan_trainable(r, k, v, w, u, S0, chunk=chunk,
+                                        interpret=_interp)
+
+    # ---- time mix -------------------------------------------------------------
+    xn = _layer_norm(x, p["ln1"]["scale"], p["ln1"]["bias"])
+    prev_tm = state["ts_tm"] if state is not None else jnp.zeros_like(xn[:, 0])
+    xs = jnp.concatenate([prev_tm[:, None, :], xn[:, :-1, :]], axis=1)
+
+    def lerp(mu):
+        return xn + (xs - xn) * mu
+
+    r = Dense.apply(p["wr"], lerp(p["mu"]["r"])).reshape(B, S, H, N)
+    k = Dense.apply(p["wk"], lerp(p["mu"]["k"])).reshape(B, S, H, N)
+    v = Dense.apply(p["wv"], lerp(p["mu"]["v"])).reshape(B, S, H, N)
+    g = Dense.apply(p["wg"], lerp(p["mu"]["g"]))
+    xw = lerp(p["mu"]["w"]).astype(jnp.float32)
+    decay_in = p["w0"] + jnp.tanh(xw @ p["wA"].astype(jnp.float32)) @ p["wB"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(decay_in)).reshape(B, S, H, N)       # (0,1) decay
+
+    S0 = (
+        state["S"] if state is not None
+        else jnp.zeros((B, H, N, N), dtype=jnp.float32)
+    )
+    u = p["u"].reshape(H, N)
+    y, S_T = mix(r, k, v, w, u, S0)
+    y = _group_norm(y.reshape(B, S, d), H, p["ln_x"]["scale"], p["ln_x"]["bias"])
+    y = y * jax.nn.silu(g)
+    x = x + Dense.apply(p["wo"], y.astype(x.dtype))
+
+    # ---- channel mix ------------------------------------------------------------
+    hn = _layer_norm(x, p["ln2"]["scale"], p["ln2"]["bias"])
+    prev_cm = state["ts_cm"] if state is not None else jnp.zeros_like(hn[:, 0])
+    hs = jnp.concatenate([prev_cm[:, None, :], hn[:, :-1, :]], axis=1)
+
+    def lerp_cm(mu):
+        return hn + (hs - hn) * mu
+
+    kk = jnp.square(jax.nn.relu(Dense.apply(p["cm_k"], lerp_cm(p["mu_cm"]["k"]))))
+    cm = jax.nn.sigmoid(Dense.apply(p["cm_r"], lerp_cm(p["mu_cm"]["r"]))) * Dense.apply(p["cm_v"], kk)
+    out = x + cm
+
+    new_state = None
+    if state is not None:
+        new_state = {"ts_tm": xn[:, -1, :], "ts_cm": hn[:, -1, :], "S": S_T}
+    return out, new_state
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = xf.var(axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale + bias
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin, arXiv:2402.19427) — RecurrentGemma temporal block
+# ---------------------------------------------------------------------------
+N_GATE_BLOCKS = 16
+RGLRU_C = 8.0
+
+
+def rglru_init(rng, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    W = cfg.recurrent.lru_width or d
+    cw = cfg.recurrent.conv_width
+    dt = jnp.dtype(cfg.dtype)
+    r = jax.random.split(rng, 7)
+    nb = N_GATE_BLOCKS
+    bs = W // nb
+
+    def blockmat(key):
+        return (jax.random.normal(key, (nb, bs, bs), dtype=jnp.float32) / np.sqrt(bs)).astype(dt)
+
+    # Lambda init so that a = sigmoid(lam) ^ c spans ~(0.9, 0.999) (Griffin §2.4)
+    lam = jnp.log(jnp.expm1(jnp.linspace(0.35, 0.9, W))).astype(jnp.float32)
+    return {
+        "proj_x": Dense.init(r[0], d, W, dt),
+        "proj_g": Dense.init(r[1], d, W, dt),
+        "proj_out": Dense.init(r[2], W, d, dt),
+        "conv": (jax.random.normal(r[3], (cw, W), dtype=jnp.float32) / np.sqrt(cw)).astype(dt),
+        "conv_b": jnp.zeros((W,), dtype=dt),
+        "wa": blockmat(r[4]),
+        "ba": jnp.zeros((W,), dtype=jnp.float32),
+        "wx": blockmat(r[5]),
+        "bx": jnp.zeros((W,), dtype=jnp.float32),
+        "lam": lam,
+    }
+
+
+def rglru_state(cfg: ModelConfig, batch: int, n_layers: int) -> Dict:
+    W = cfg.recurrent.lru_width or cfg.d_model
+    cw = cfg.recurrent.conv_width
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "conv": jnp.zeros((n_layers, batch, cw - 1, W), dtype=dt),
+        "h": jnp.zeros((n_layers, batch, W), dtype=jnp.float32),
+    }
+
+
+def _block_diag_mm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (B,S,W), w: (nb, bs, bs) block-diagonal -> (B,S,W)."""
+    B, S, W = x.shape
+    nb, bs, _ = w.shape
+    xb = x.reshape(B, S, nb, bs)
+    yb = jnp.einsum("bsnd,nde->bsne", xb, w)
+    return yb.reshape(B, S, W)
+
+
+def _causal_conv(x: jnp.ndarray, kernel: jnp.ndarray, bias: jnp.ndarray,
+                 prev: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. x: (B,S,W), kernel: (cw,W), prev: (B,cw-1,W)."""
+    cw = kernel.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), dtype=x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)                    # (B, S+cw-1, W)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * kernel[i] for i in range(cw)
+    ) + bias
+    return y.astype(x.dtype), xp[:, -(cw - 1):, :]
+
+
+def rglru_apply(
+    cfg: ModelConfig, p: Dict, x: jnp.ndarray, state: Optional[Dict]
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Griffin recurrent block: proj -> conv -> RG-LRU, gated by GeLU branch."""
+    B, S, d = x.shape
+    xb = Dense.apply(p["proj_x"], x)                           # (B,S,W)
+    gb = Dense.apply(p["proj_g"], x)
+
+    conv_prev = state["conv"] if state is not None else None
+    xc, conv_state = _causal_conv(xb, p["conv"], p["conv_b"], conv_prev)
+
+    # RG-LRU gates (block-diagonal input projections)
+    rgate = jax.nn.sigmoid(_block_diag_mm(xc, p["wa"]).astype(jnp.float32) + p["ba"])
+    igate = jax.nn.sigmoid(_block_diag_mm(xc, p["wx"]).astype(jnp.float32) + p["bx"])
+    log_a = -RGLRU_C * rgate * jax.nn.softplus(p["lam"])       # log a_t  (B,S,W)
+    a = jnp.exp(log_a)
+    gated_x = igate * xc.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+
+    h0 = state["h"] if state is not None else jnp.zeros((B, xb.shape[-1]), jnp.float32)
+    if S == 1:
+        h = a[:, 0] * h0 + b[:, 0]
+        hs = h[:, None, :]
+        h_last = h
+    else:
+        # linear recurrence via associative scan (TPU-native, log-depth);
+        # fold the incoming state into the first step's offset.
+        b0 = b.at[:, 0, :].add(a[:, 0, :] * h0)
+        aa, bb = jax.lax.associative_scan(
+            lambda l, r: (l[0] * r[0], r[0] * l[1] + r[1]), (a, b0), axis=1
+        )
+        hs = bb
+        h_last = bb[:, -1, :]
+
+    y = hs.astype(x.dtype) * jax.nn.gelu(gb, approximate=True)
+    out = Dense.apply(p["proj_out"], y)
+
+    new_state = None
+    if state is not None:
+        new_state = {"conv": conv_state, "h": h_last}
+    return out, new_state

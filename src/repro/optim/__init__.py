@@ -1,0 +1,20 @@
+"""Optimizers (AdamW, Adafactor), LR schedules, gradient clipping and
+gradient compression — all hand-rolled in JAX (no optax dependency)."""
+from .optimizers import AdamW, Adafactor, Optimizer, clip_by_global_norm, global_norm
+from .schedules import constant, cosine_with_warmup, linear_warmup
+from .compression import compress_gradients, decompress_gradients, int8_quantize, int8_dequantize
+
+__all__ = [
+    "Optimizer",
+    "AdamW",
+    "Adafactor",
+    "clip_by_global_norm",
+    "global_norm",
+    "constant",
+    "cosine_with_warmup",
+    "linear_warmup",
+    "compress_gradients",
+    "decompress_gradients",
+    "int8_quantize",
+    "int8_dequantize",
+]

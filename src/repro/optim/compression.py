@@ -1,0 +1,59 @@
+"""Gradient compression for slow inter-pod links.
+
+At 512+ chips the pod-to-pod all-reduce rides DCN-class links that are an
+order of magnitude slower than in-pod ICI.  ``compress_gradients`` performs
+per-leaf int8 quantisation with a float32 per-leaf max-abs scale (stochastic
+rounding optional) so the cross-pod all-reduce moves 4x fewer bytes; the
+receiver dequantises and the (bf16) in-pod reduction stays exact.
+
+This is a *distributed-optimization trick* layer: the train step exposes
+``grad_compression='int8'|'none'`` and the dry-run shows the collective-byte
+delta in the roofline table.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["int8_quantize", "int8_dequantize", "compress_gradients", "decompress_gradients"]
+
+
+def int8_quantize(x: jnp.ndarray, rng: Optional[jax.Array] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantisation. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    y = xf / scale
+    if rng is not None:  # stochastic rounding: unbiased gradient estimate
+        y = jnp.floor(y + jax.random.uniform(rng, y.shape))
+    else:
+        y = jnp.round(y)
+    return jnp.clip(y, -127, 127).astype(jnp.int8), scale
+
+
+def int8_dequantize(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_gradients(grads: Any, rng: Optional[jax.Array] = None) -> Any:
+    """Quantise every leaf; returns a pytree of (q, scale) dicts."""
+    leaves, treedef = jax.tree.flatten(grads)
+    if rng is not None:
+        rngs = jax.random.split(rng, len(leaves))
+    else:
+        rngs = [None] * len(leaves)
+    out = []
+    for leaf, r in zip(leaves, rngs):
+        q, s = int8_quantize(leaf, r)
+        out.append({"q": q, "scale": s})
+    return treedef.unflatten(out)
+
+
+def decompress_gradients(cgrads: Any, like: Any) -> Any:
+    return jax.tree.map(
+        lambda c, p: int8_dequantize(c["q"], c["scale"], p.dtype),
+        cgrads, like,
+        is_leaf=lambda x: isinstance(x, dict) and "q" in x,
+    )

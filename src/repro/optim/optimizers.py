@@ -1,0 +1,164 @@
+"""AdamW and Adafactor, pytree-native.
+
+Design notes for the 512-chip configs:
+  * Optimizer state inherits the parameter sharding (states are created with
+    ``jax.tree.map`` over params inside the jitted train step, so GSPMD
+    propagates the param PartitionSpecs — ZeRO-style sharded states for free).
+  * ``state_dtype`` lets the huge configs keep m/v in bf16.
+  * Adafactor factors the second moment of rank>=2 leaves into row/col
+    statistics — O(n+m) instead of O(n*m) state — which is what lets
+    DeepSeek-V3 (671B) train within 16 GB/chip HBM (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "AdamW", "Adafactor", "clip_by_global_norm", "global_norm"]
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+def _lr_at(lr: Schedule, step: jnp.ndarray) -> jnp.ndarray:
+    return lr(step) if callable(lr) else jnp.asarray(lr, dtype=jnp.float32)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (n + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), n
+
+
+class Optimizer:
+    """init(params) -> state;  update(grads, state, params) -> (params, state)."""
+
+    def init(self, params) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def update(self, grads, state, params):
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class AdamW(Optimizer):
+    lr: Schedule = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    state_dtype: Optional[str] = None   # None = param dtype; "bfloat16" to halve state
+    clip_norm: Optional[float] = 1.0
+
+    def _sd(self, p):
+        return jnp.dtype(self.state_dtype) if self.state_dtype else p.dtype
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, dtype=self._sd(p))
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(self, grads, state, params):
+        if self.clip_norm is not None:
+            grads, gn = clip_by_global_norm(grads, self.clip_norm)
+        step = state["step"] + 1
+        lr = _lr_at(self.lr, step)
+        c1 = 1.0 - self.b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * gf
+            vf = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * gf * gf
+            u = (mf / c1) / (jnp.sqrt(vf / c2) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return newp, mf.astype(m.dtype), vf.astype(v.dtype)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        newp = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        newm = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        newv = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return newp, {"step": step, "m": newm, "v": newv}
+
+
+@dataclass(frozen=True)
+class Adafactor(Optimizer):
+    """Adafactor (Shazeer & Stern '18) with factored second moments, no
+    momentum, update clipping — the memory-lean choice for >=100B configs."""
+
+    lr: Schedule = 1e-3
+    decay: float = 0.8        # beta2_t = 1 - step^-decay
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    min_dim_size_to_factor: int = 128
+
+    def _factored(self, p) -> bool:
+        return (
+            p.ndim >= 2
+            and p.shape[-1] >= self.min_dim_size_to_factor
+            and p.shape[-2] >= self.min_dim_size_to_factor
+        )
+
+    def init(self, params):
+        def st(p):
+            if self._factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], dtype=jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], dtype=jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, dtype=jnp.float32)}
+
+        return {"step": jnp.zeros((), jnp.int32), "v": jax.tree.map(
+            st, params, is_leaf=lambda x: isinstance(x, jnp.ndarray) or hasattr(x, "shape")
+        )}
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        sf = step.astype(jnp.float32)
+        beta2 = 1.0 - sf ** (-self.decay)
+        lr = _lr_at(self.lr, step)
+
+        def upd(p, g, v):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + self.eps1
+            if "vr" in v:
+                vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                denom = vr.mean(axis=-1, keepdims=True)
+                r = (vr / jnp.maximum(denom, self.eps1))[..., None]
+                c = vc[..., None, :]
+                u = gf * jax.lax.rsqrt(jnp.maximum(r * c, self.eps1))
+                newv = {"vr": vr, "vc": vc}
+            else:
+                vf = beta2 * v["v"] + (1 - beta2) * g2
+                u = gf * jax.lax.rsqrt(jnp.maximum(vf, self.eps1))
+                newv = {"v": vf}
+            # update clipping (RMS(u) <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            scale = lr * jnp.maximum(self.eps2, 1.0)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - scale * u).astype(p.dtype), newv
+
+        leaves_p, treedef = jax.tree.flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_v = treedef.flatten_up_to(state["v"])
+        outs = [upd(p, g, v) for p, g, v in zip(leaves_p, leaves_g, leaves_v)]
+        newp = treedef.unflatten([o[0] for o in outs])
+        newv = treedef.unflatten([o[1] for o in outs])
+        return newp, {"step": step, "v": newv}

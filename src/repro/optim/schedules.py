@@ -1,0 +1,27 @@
+"""Learning-rate schedules (callables of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "linear_warmup", "cosine_with_warmup"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup: int):
+    def f(step):
+        s = step.astype(jnp.float32)
+        return lr * jnp.minimum(1.0, s / max(warmup, 1))
+    return f
+
+
+def cosine_with_warmup(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, s / max(warmup, 1))
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * warm * cos
+    return f

@@ -1,0 +1,135 @@
+"""Single-replica continuous-batching engine.
+
+A fixed-capacity slot array over a preallocated KV cache: requests are
+prefilled into free slots, every ``step()`` decodes all active slots in one
+jitted call, finished requests free their slots.  This is the real
+(CPU-runnable) engine behind the serving example; it also provides
+``measure_interference`` — the Fig.-4 analogue that fits the paper's linear
+service-time model ``T = m*k + c`` to *measured* decode latencies as a
+function of co-batched sequences, which the fleet scheduler then consumes.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.interference import fit_linear_interference
+from ..models.transformer import LM
+
+__all__ = ["ServingEngine"]
+
+
+@dataclass
+class _Slot:
+    request_id: Optional[str] = None
+    pos: int = 0
+    remaining: int = 0
+    generated: Optional[List[int]] = None
+
+
+class ServingEngine:
+    def __init__(self, model: LM, params, max_batch: int = 8, max_seq: int = 512):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.caches = model.init_cache(max_batch, max_seq)
+        self.slots = [_Slot() for _ in range(max_batch)]
+        self.tokens = jnp.zeros((max_batch,), jnp.int32)
+        self.pos = jnp.zeros((max_batch,), jnp.int32)
+
+        self._decode = jax.jit(model.decode_step, donate_argnums=(3,))
+        self._prefill = jax.jit(model.prefill, donate_argnums=(2,))
+
+    # -- request lifecycle ------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.request_id is None]
+
+    @property
+    def active(self) -> int:
+        return sum(s.request_id is not None for s in self.slots)
+
+    def add_request(self, request_id: str, prompt: Sequence[int],
+                    max_new_tokens: int) -> int:
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free slots")
+        slot = free[0]
+        prompt = np.asarray(prompt, dtype=np.int32)[None, :]   # (1, P)
+        tmp_cache = self.model.init_cache(1, self.max_seq)
+        logits, tmp_cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(prompt)}, tmp_cache
+        )
+        # splice the single-request cache into this slot
+        def splice(full, one):
+            if full is None:
+                return None
+            return full.at[:, slot].set(one[:, 0])
+        self.caches = jax.tree.map(splice, self.caches, tmp_cache)
+        first = int(jnp.argmax(logits[0]))
+        st = self.slots[slot]
+        st.request_id = request_id
+        st.pos = prompt.shape[1]
+        st.remaining = max_new_tokens
+        st.generated = [first]
+        self.tokens = self.tokens.at[slot].set(first)
+        self.pos = self.pos.at[slot].set(st.pos)
+        return slot
+
+    def step(self) -> Dict[str, List[int]]:
+        """One decode step for all active slots; returns finished requests."""
+        logits, self.caches = self._decode(
+            self.params, self.tokens, self.pos, self.caches
+        )
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        finished: Dict[str, List[int]] = {}
+        new_tokens = np.asarray(nxt)
+        for i, st in enumerate(self.slots):
+            if st.request_id is None:
+                continue
+            st.generated.append(int(new_tokens[i]))
+            st.pos += 1
+            st.remaining -= 1
+            if st.remaining <= 0 or st.pos >= self.max_seq - 1:
+                finished[st.request_id] = st.generated
+                st.request_id = None
+                st.generated = None
+        self.tokens = jnp.asarray(new_tokens)
+        self.pos = self.pos + 1
+        return finished
+
+
+# -- the Fig. 4 analogue ---------------------------------------------------------
+def measure_interference(
+    model: LM, params, batch_sizes: Sequence[int], *, max_seq: int = 256,
+    iters: int = 20, warmup: int = 3, prompt_len: int = 8,
+) -> Tuple[float, float, float, List[Tuple[int, float]]]:
+    """Measure decode-step latency as a function of co-batched sequences and
+    fit the paper's linear interference model ``T = m*k + c`` to REAL
+    timings (the serving analogue of the paper's Fig. 4 verification).
+    Returns (m, c, r2, samples)."""
+    samples: List[Tuple[int, float]] = []
+    rng = np.random.default_rng(0)
+    for k in batch_sizes:
+        eng = ServingEngine(model, params, max_batch=int(k), max_seq=max_seq)
+        for j in range(int(k)):
+            eng.add_request(
+                f"probe{j}", rng.integers(0, model.cfg.vocab, prompt_len),
+                max_new_tokens=10**9,
+            )
+        for _ in range(warmup):
+            eng.step()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            eng.step()
+        dt = (time.perf_counter() - t0) / iters
+        samples.append((int(k), dt))
+    m, c, r2 = fit_linear_interference(
+        [s[0] for s in samples], [s[1] for s in samples]
+    )
+    return m, c, r2, samples

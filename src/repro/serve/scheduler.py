@@ -1,0 +1,170 @@
+"""Fleet-level serving scheduler: IBDASH over model replicas.
+
+The mapping (DESIGN.md §Serving):
+  edge device  -> model-replica group (a slice of pods serving one copy)
+  task type    -> request class (prefill-heavy vs decode-heavy, ctx length)
+  (m, c) plot  -> measured decode/prefill latency vs co-batched requests
+                  (fit by serve.engine.measure_interference — real timings)
+  model upload -> model/LoRA artifact load onto a replica (M_info = which
+                  adapters are resident; LRU eviction under HBM pressure)
+  failure      -> replica preemption (spot pods); exponential model
+  replication  -> speculative duplicate dispatch of requests on flaky
+                  replicas (first responder wins)
+
+A request is itself a 2-task DAG: prefill -> decode, so the full Algorithm 1
+machinery (stage barriers, transfer costs between stages placed on
+different replicas = KV-cache migration cost) applies verbatim — the same
+``repro.core`` code that reproduces the paper schedules the serving fleet.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.baselines import LAVEA, Petrel, RandomScheduler, RoundRobinScheduler
+from ..core.cluster import ClusterState, Device
+from ..core.dag import AppDAG, TaskSpec
+from ..core.interference import InterferenceModel
+from ..core.orchestrator import IBDASH, IBDASHConfig, Scheduler
+from ..sim.engine import Engine, SimResult
+
+__all__ = ["RequestClass", "make_request_dag", "ServingFleet"]
+
+MB = 1e6
+
+# Request classes = "task types" for the interference table.
+#   0: prefill-short   1: prefill-long   2: decode-short   3: decode-long
+N_REQUEST_TYPES = 4
+
+
+@dataclass(frozen=True)
+class RequestClass:
+    name: str
+    prefill_type: int
+    decode_type: int
+    kv_bytes: float              # KV-cache size moved if stages change replica
+    adapter: Optional[str] = None
+    adapter_bytes: float = 0.0
+
+
+SHORT = RequestClass("short", 0, 2, kv_bytes=2 * MB)
+LONG = RequestClass("long", 1, 3, kv_bytes=64 * MB,
+                    adapter="lora-long", adapter_bytes=120 * MB)
+
+
+def make_request_dag(req_id: str, rc: RequestClass) -> AppDAG:
+    """prefill -> decode, with the KV cache as the inter-stage data."""
+    return AppDAG.from_tasks(
+        f"req-{rc.name}",
+        [
+            TaskSpec(
+                f"prefill{req_id}", ttype=rc.prefill_type,
+                out_bytes=rc.kv_bytes, model_id=rc.adapter,
+                model_bytes=rc.adapter_bytes, mem_bytes=rc.kv_bytes,
+            ),
+            TaskSpec(
+                f"decode{req_id}", ttype=rc.decode_type,
+                deps=(f"prefill{req_id}",), out_bytes=0.1 * MB,
+                model_id=rc.adapter, model_bytes=rc.adapter_bytes,
+                mem_bytes=rc.kv_bytes,
+            ),
+        ],
+    )
+
+
+class ServingFleet:
+    """A fleet of model replicas driven by any core Scheduler policy."""
+
+    def __init__(
+        self,
+        interference: InterferenceModel,
+        *,
+        n_replicas: int = 16,
+        replica_classes: Optional[Sequence[int]] = None,
+        lams: Sequence[float] = (1e-5, 8e-4),      # (reserved, spot)
+        hbm_bytes: float = 16e9,
+        link_bw: float = 2e9,
+        policy: str = "ibdash",
+        alpha: float = 0.5,
+        beta: float = 0.1,
+        gamma: int = 2,
+        seed: int = 0,
+        horizon: float = 120.0,
+    ):
+        self.interference = interference
+        classes = (
+            list(replica_classes)
+            if replica_classes is not None
+            else [i % 2 for i in range(n_replicas)]   # alternate reserved/spot
+        )
+        rng = np.random.default_rng(seed)
+        devices = []
+        for i, cls in enumerate(classes):
+            lam = float(lams[cls])
+            lifetime = rng.exponential(1 / lam) if lam > 0 else float("inf")
+            devices.append(Device(
+                did=i, cls=cls, mem_total=hbm_bytes, lam=lam,
+                bandwidth=link_bw, alive_until=lifetime,
+            ))
+        self.cluster = ClusterState(
+            devices=devices, model=interference, horizon=horizon, dt=0.02
+        )
+        self.scheduler = self._make_policy(policy, alpha, beta, gamma, seed)
+        self.engine = Engine(self.cluster, self.scheduler, seed=seed)
+        self.horizon = horizon
+
+    @staticmethod
+    def _make_policy(policy, alpha, beta, gamma, seed) -> Scheduler:
+        if policy == "ibdash":
+            return IBDASH(IBDASHConfig(alpha=alpha, beta=beta, gamma=gamma))
+        if policy == "petrel":
+            return Petrel(seed=seed)
+        if policy == "lavea":
+            return LAVEA(seed=seed)
+        if policy == "round_robin":
+            return RoundRobinScheduler(seed=seed)
+        if policy == "random":
+            return RandomScheduler(seed=seed)
+        raise ValueError(policy)
+
+    def run(
+        self,
+        n_requests: int = 500,
+        long_frac: float = 0.3,
+        arrival_window: float = 20.0,
+        seed: int = 1,
+    ) -> SimResult:
+        rng = np.random.default_rng(seed)
+        apps, times = [], []
+        for i in range(n_requests):
+            rc = LONG if rng.random() < long_frac else SHORT
+            apps.append(make_request_dag(f"#{i}", rc))
+            times.append(float(rng.uniform(0.0, arrival_window)))
+        self.engine.add_arrivals(apps, sorted(times))
+        self.engine.run(until=self.horizon)
+        return self.engine.result(scenario="serving", horizon=self.horizon)
+
+
+def serving_interference_model(
+    m_short: float = 0.004, c_short: float = 0.035,
+    m_long: float = 0.012, c_long: float = 0.220,
+    n_classes: int = 2, fast_factor: float = 0.6,
+) -> InterferenceModel:
+    """Build the replica interference table from measured (m, c) pairs
+    (defaults match CPU measurements of the tiny-model engine; production
+    would feed measure_interference outputs per hardware class)."""
+    base = np.zeros((n_classes, N_REQUEST_TYPES))
+    slope = np.zeros((n_classes, N_REQUEST_TYPES, N_REQUEST_TYPES))
+    c = np.array([c_short, c_long, c_short * 0.5, c_long * 0.5])
+    m = np.array([m_short, m_long, m_short, m_long])
+    for cls in range(n_classes):
+        f = 1.0 if cls == 0 else 1.0 / fast_factor   # class 1 = slower spot HW
+        base[cls] = c * f
+        # decode-vs-decode contention dominates; prefill adds compute bursts
+        for i in range(N_REQUEST_TYPES):
+            for j in range(N_REQUEST_TYPES):
+                scale = 1.0 if (i >= 2) == (j >= 2) else 1.6
+                slope[cls, i, j] = m[i] * scale * f
+    return InterferenceModel(base=base, slope=slope)

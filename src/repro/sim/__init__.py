@@ -1,0 +1,39 @@
+"""Discrete-event edge-computing simulator reproducing the paper's §V
+evaluation: device profiles (Table III/IV), the four DAG applications
+(Fig. 6), the event engine, and the scheme x scenario experiment runner.
+"""
+from .apps import APP_BUILDERS, all_apps, lightgbm_app, mapreduce_app, matrix_app, video_app
+from .engine import Engine, InstanceRecord, SimResult
+from .profiles import (
+    DEVICE_CLASSES,
+    SCENARIOS,
+    TASK_TYPES,
+    EdgeProfile,
+    make_cluster,
+    make_profile,
+)
+from .runner import SimConfig, make_scheduler, run_grid, run_one, sweep_alpha, sweep_gamma
+
+__all__ = [
+    "APP_BUILDERS",
+    "all_apps",
+    "lightgbm_app",
+    "mapreduce_app",
+    "matrix_app",
+    "video_app",
+    "Engine",
+    "InstanceRecord",
+    "SimResult",
+    "DEVICE_CLASSES",
+    "SCENARIOS",
+    "TASK_TYPES",
+    "EdgeProfile",
+    "make_cluster",
+    "make_profile",
+    "SimConfig",
+    "make_scheduler",
+    "run_grid",
+    "run_one",
+    "sweep_alpha",
+    "sweep_gamma",
+]

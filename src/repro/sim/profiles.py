@@ -1,0 +1,217 @@
+"""Device & task profiles for the edge simulator (paper §V-B, Table III/IV).
+
+The paper profiles every (task type × task type) interference pair on eight
+real platforms (a MacBook Pro + seven EC2 instance types) and feeds the
+measured (m, c) coefficients into its simulator.  We regenerate statistically
+similar profiles from the published hardware specs:
+
+  * base latency  c[p, i] = work_i / (freq_p * amdahl(cores_p, f_i))
+  * slope         m[p, i, j] = c[p, i] * contention[i, j] * (4 / cores_p)^0.35
+
+Relative slopes (slope/base ~ 0.2-0.35 for cpu-cpu pairs) are calibrated
+against the paper's Fig. 4, where five co-located tasks roughly double the
+service time on the MacBook.  Many-core high-frequency devices
+(c5.4xlarge) still have the smallest bases *and* mildly smaller relative
+slopes — the structure that makes LaTS concentrate load on the fastest
+class in the paper's Fig. 10 while IBDASH spreads out.
+
+All coefficients are deterministic given the seed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.availability import LAMBDA_CED, LAMBDA_MIX, LAMBDA_PED, sample_lifetime
+from ..core.baselines import LaTSModel
+from ..core.cluster import ClusterState, Device
+from ..core.interference import InterferenceModel
+
+__all__ = [
+    "DeviceClass",
+    "DEVICE_CLASSES",
+    "TaskType",
+    "TASK_TYPES",
+    "EdgeProfile",
+    "make_profile",
+    "make_cluster",
+    "SCENARIOS",
+]
+
+MB = 1e6
+GB = 1e9
+
+
+@dataclass(frozen=True)
+class DeviceClass:
+    """Table III row."""
+
+    name: str
+    cpus: int
+    mem_gb: float
+    freq_ghz: float
+    bandwidth: float        # bytes/s network link (not in Table III; see §V-B "B")
+
+
+# Table III of the paper.  Bandwidths: EC2 instances share a ~1 Gbps edge
+# link; the MacBook sits on campus Wi-Fi.
+DEVICE_CLASSES: Tuple[DeviceClass, ...] = (
+    DeviceClass("macbook-pro-2017", 2, 8, 3.1, 50 * MB),
+    DeviceClass("t2.xlarge", 4, 16, 2.3, 125 * MB),
+    DeviceClass("t2.2xlarge", 8, 32, 2.3, 125 * MB),
+    DeviceClass("t3.xlarge", 4, 16, 2.5, 125 * MB),
+    DeviceClass("t3a.xlarge", 4, 16, 2.2, 125 * MB),
+    DeviceClass("c5.2xlarge", 8, 16, 3.4, 125 * MB),
+    DeviceClass("c5.4xlarge", 16, 32, 3.4, 125 * MB),
+    DeviceClass("t3.2xlarge", 8, 32, 2.5, 125 * MB),
+)
+
+
+@dataclass(frozen=True)
+class TaskType:
+    """One entry of the global task-type table ``T`` (shared by all 4 apps).
+
+    work           abstract compute units (calibrated so bases are ~0.05-0.6 s)
+    parallel_frac  Amdahl parallel fraction (io-ish tasks parallelise poorly)
+    cpu_frac       incremental CPU usage of one instance on a 4-core device
+    kind           'cpu' | 'io'  (drives the contention matrix)
+    """
+
+    name: str
+    work: float
+    parallel_frac: float
+    cpu_frac: float
+    kind: str
+
+
+TASK_TYPES: Tuple[TaskType, ...] = (
+    TaskType("read_input", 0.25, 0.20, 0.15, "io"),      # 0  LightGBM
+    TaskType("pca", 0.90, 0.75, 0.55, "cpu"),            # 1
+    TaskType("train_tree", 1.40, 0.85, 0.70, "cpu"),     # 2
+    TaskType("combine_test", 0.60, 0.60, 0.40, "cpu"),   # 3
+    TaskType("map", 0.50, 0.55, 0.35, "io"),             # 4  MapReduce
+    TaskType("reduce", 0.80, 0.70, 0.50, "cpu"),         # 5
+    TaskType("split_video", 0.35, 0.30, 0.25, "io"),     # 6  Video analytics
+    TaskType("extract_frame", 0.70, 0.65, 0.45, "cpu"),  # 7
+    TaskType("classify", 1.10, 0.80, 0.65, "cpu"),       # 8
+    TaskType("mat_inv", 1.30, 0.80, 0.70, "cpu"),        # 9  Matrix computation
+    TaskType("mat_mul", 1.00, 0.90, 0.75, "cpu"),        # 10
+    TaskType("mat_vec", 0.45, 0.60, 0.35, "cpu"),        # 11
+)
+
+N_TYPES = len(TASK_TYPES)
+
+# Scenario name -> per-class failure rates (paper Table IV).
+SCENARIOS: Dict[str, np.ndarray] = {
+    "mix": LAMBDA_MIX,
+    "ced": LAMBDA_CED,
+    "ped": LAMBDA_PED,
+}
+
+
+def _amdahl(cores: int, frac: float) -> float:
+    return 1.0 / ((1.0 - frac) + frac / cores)
+
+
+@dataclass
+class EdgeProfile:
+    """Everything the simulator needs about hardware + tasks."""
+
+    interference: InterferenceModel
+    lats_model: LaTSModel
+    cpu_usage: np.ndarray            # (P, N)
+    classes: Tuple[DeviceClass, ...] = DEVICE_CLASSES
+    task_types: Tuple[TaskType, ...] = TASK_TYPES
+
+
+def make_profile(seed: int = 0, calib: float = 0.55) -> EdgeProfile:
+    """Generate the (m, c) interference tables + the LaTS latency-CPU model."""
+    rng = np.random.default_rng(seed)
+    P, N = len(DEVICE_CLASSES), N_TYPES
+
+    base = np.zeros((P, N))
+    cpu_usage = np.zeros((P, N))
+    for p, dc in enumerate(DEVICE_CLASSES):
+        for i, tt in enumerate(TASK_TYPES):
+            # Tempered Amdahl: EC2 vCPUs are hyperthreads on burstable
+            # instances, so the many-core advantage is milder than the raw
+            # core count suggests (calibrated against the ~1.3-2x spread in
+            # the paper's Fig. 8 service times across schemes/devices).
+            speedup = dc.freq_ghz * _amdahl(dc.cpus, tt.parallel_frac) ** 0.55
+            base[p, i] = calib * tt.work / speedup
+            # cpu_frac is referenced to a 4-core device.
+            cpu_usage[p, i] = min(tt.cpu_frac * 4.0 / dc.cpus, 1.0)
+
+    # Pairwise contention: cpu-cpu pairs contend hard, io-involving pairs
+    # less; the +-25% jitter reproduces the per-pair heterogeneity of Fig. 2.
+    contention = np.zeros((N, N))
+    for i, ti in enumerate(TASK_TYPES):
+        for j, tj in enumerate(TASK_TYPES):
+            if ti.kind == "cpu" and tj.kind == "cpu":
+                c0 = 0.28
+            elif ti.kind == "io" and tj.kind == "io":
+                c0 = 0.16
+            else:
+                c0 = 0.10
+            contention[i, j] = c0 * rng.uniform(0.75, 1.25)
+
+    slope = np.zeros((P, N, N))
+    for p, dc in enumerate(DEVICE_CLASSES):
+        slope[p] = base[p][:, None] * contention * (4.0 / dc.cpus) ** 0.35
+
+    interference = InterferenceModel(base=base, slope=slope)
+
+    # Fit LaTS' log-linear latency-vs-usage model on profiling data generated
+    # from the ground-truth interference model (paper Fig. 5 does this from
+    # measurements): for each class, regress log(latency) on CPU usage.
+    b = np.zeros(P)
+    for p in range(P):
+        xs, ys = [], []
+        for _ in range(400):
+            counts = rng.poisson(rng.uniform(0.3, 3.0), size=N).astype(np.float64)
+            usage = min(float((cpu_usage[p] * counts).sum()), 4.0)
+            i = int(rng.integers(N))
+            lat = interference.estimate(p, i, counts)
+            xs.append(usage)
+            ys.append(np.log(lat / base[p, i]))
+        A = np.stack([np.asarray(xs), np.ones(len(xs))], axis=1)
+        (bp, _), *_ = np.linalg.lstsq(A, np.asarray(ys), rcond=None)
+        b[p] = max(bp, 0.0)
+
+    lats = LaTSModel(base=base.copy(), b=b, cpu_usage=cpu_usage.copy())
+    return EdgeProfile(interference=interference, lats_model=lats, cpu_usage=cpu_usage)
+
+
+def make_cluster(
+    profile: EdgeProfile,
+    scenario: str = "mix",
+    n_devices: int = 100,
+    seed: int = 0,
+    horizon: float = 330.0,
+    dt: float = 0.05,
+) -> ClusterState:
+    """Build the fleet: ``n_devices`` uniformly over the 8 classes (paper
+    §V-G), ground-truth lifetimes drawn from the scenario's Table-IV rates."""
+    lams = SCENARIOS[scenario]
+    rng = np.random.default_rng(seed)
+    devices: List[Device] = []
+    for did in range(n_devices):
+        cls = did % len(DEVICE_CLASSES)
+        dc = DEVICE_CLASSES[cls]
+        lam = float(lams[cls])
+        devices.append(
+            Device(
+                did=did,
+                cls=cls,
+                mem_total=dc.mem_gb * GB,
+                lam=lam,
+                bandwidth=dc.bandwidth,
+                join_time=0.0,
+                alive_until=sample_lifetime(lam, rng),
+            )
+        )
+    return ClusterState(
+        devices=devices, model=profile.interference, horizon=horizon, dt=dt
+    )

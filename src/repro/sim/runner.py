@@ -1,0 +1,147 @@
+"""Experiment runner: reproduces the paper's evaluation grids (§V-G..J).
+
+Protocol (paper §V-G): ``n_cycles`` cycles of ``cycle_len`` seconds;
+``instances_per_cycle`` application instances arrive uniformly inside the
+first ``arrival_window`` seconds of each cycle; the application mix is
+uniform over the four test applications; the fleet is ``n_devices`` devices
+uniform over the 8 Table-III classes.
+
+Fairness: every scheme sees the *same* environment draw — identical device
+lifetimes, arrival times and application instances (common random numbers).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.baselines import LAVEA, LaTS, Petrel, RandomScheduler, RoundRobinScheduler
+from ..core.dag import AppDAG
+from ..core.orchestrator import IBDASH, IBDASHConfig, Scheduler
+from .apps import APP_BUILDERS
+from .engine import Engine, SimResult
+from .profiles import EdgeProfile, make_cluster, make_profile
+
+__all__ = ["SimConfig", "make_scheduler", "run_one", "run_grid", "sweep_alpha", "sweep_gamma"]
+
+SCHEME_NAMES = ("ibdash", "lats", "lavea", "petrel", "round_robin", "random")
+
+
+@dataclass
+class SimConfig:
+    scenario: str = "mix"
+    n_devices: int = 100
+    n_cycles: int = 20
+    cycle_len: float = 15.0
+    arrival_window: float = 1.5
+    instances_per_cycle: int = 1000
+    seed: int = 0
+    noise_sigma: float = 0.10
+    alpha: float = 0.5
+    beta: float = 0.1
+    gamma: int = 3
+
+    @property
+    def horizon(self) -> float:
+        return self.n_cycles * self.cycle_len
+
+
+def make_scheduler(name: str, profile: EdgeProfile, cfg: SimConfig) -> Scheduler:
+    if name == "ibdash":
+        return IBDASH(IBDASHConfig(alpha=cfg.alpha, beta=cfg.beta, gamma=cfg.gamma))
+    if name == "lats":
+        return LaTS(profile.lats_model, seed=cfg.seed)
+    if name == "lavea":
+        return LAVEA(seed=cfg.seed)
+    if name == "petrel":
+        return Petrel(seed=cfg.seed)
+    if name == "round_robin":
+        return RoundRobinScheduler(seed=cfg.seed)
+    if name == "random":
+        return RandomScheduler(seed=cfg.seed)
+    raise ValueError(f"unknown scheme {name!r}")
+
+
+def _make_workload(cfg: SimConfig) -> Tuple[List[AppDAG], List[float]]:
+    """Deterministic (apps, arrival times) shared by every scheme."""
+    rng = np.random.default_rng(cfg.seed + 1)
+    builders = list(APP_BUILDERS.values())
+    apps: List[AppDAG] = []
+    times: List[float] = []
+    uid = 0
+    for c in range(cfg.n_cycles):
+        t0 = c * cfg.cycle_len
+        arr = np.sort(rng.uniform(0.0, cfg.arrival_window, cfg.instances_per_cycle))
+        for t in arr:
+            base = builders[int(rng.integers(len(builders)))]()
+            apps.append(base.relabel(f"#{uid}"))
+            times.append(float(t0 + t))
+            uid += 1
+    return apps, times
+
+
+def run_one(
+    scheme: str,
+    cfg: SimConfig,
+    profile: Optional[EdgeProfile] = None,
+) -> SimResult:
+    profile = profile or make_profile(seed=cfg.seed)
+    cluster = make_cluster(
+        profile, scenario=cfg.scenario, n_devices=cfg.n_devices, seed=cfg.seed,
+        horizon=cfg.horizon + 30.0,
+    )
+    scheduler = make_scheduler(scheme, profile, cfg)
+    engine = Engine(cluster, scheduler, seed=cfg.seed, noise_sigma=cfg.noise_sigma)
+    apps, times = _make_workload(cfg)
+    engine.add_arrivals(apps, times)
+    engine.run(until=cfg.horizon + 25.0)
+    return engine.result(scenario=cfg.scenario, horizon=cfg.horizon)
+
+
+def run_grid(
+    schemes: Sequence[str] = SCHEME_NAMES,
+    scenarios: Sequence[str] = ("ced", "ped", "mix"),
+    cfg: Optional[SimConfig] = None,
+) -> Dict[Tuple[str, str], SimResult]:
+    """The full Fig. 8 / Fig. 9 grid: scheme x scenario."""
+    cfg = cfg or SimConfig()
+    profile = make_profile(seed=cfg.seed)
+    out: Dict[Tuple[str, str], SimResult] = {}
+    for scen in scenarios:
+        for scheme in schemes:
+            out[(scheme, scen)] = run_one(
+                scheme, replace(cfg, scenario=scen), profile
+            )
+    return out
+
+
+def sweep_alpha(
+    alphas: Sequence[float],
+    cfg: Optional[SimConfig] = None,
+) -> List[Tuple[float, float, float]]:
+    """Fig. 12a: sweep the joint-optimisation weight.  Returns
+    (alpha, avg service time, avg P_f) triples."""
+    cfg = cfg or SimConfig(scenario="mix")
+    profile = make_profile(seed=cfg.seed)
+    rows = []
+    for a in alphas:
+        res = run_one("ibdash", replace(cfg, alpha=float(a)), profile)
+        rows.append((float(a), res.avg_service_time, res.prob_failure))
+    return rows
+
+
+def sweep_gamma(
+    gammas: Sequence[int],
+    cfg: Optional[SimConfig] = None,
+) -> List[Tuple[int, float, float, float]]:
+    """Fig. 12b: sweep the replication-degree cap.  Returns
+    (gamma, avg service time, avg P_f, avg #replicas) tuples."""
+    cfg = cfg or SimConfig(scenario="ped")
+    profile = make_profile(seed=cfg.seed)
+    rows = []
+    for g in gammas:
+        res = run_one("ibdash", replace(cfg, gamma=int(g)), profile)
+        nrep = float(np.mean([r.n_replicas for r in res.instances]))
+        rows.append((int(g), res.avg_service_time, res.prob_failure, nrep))
+    return rows

@@ -1,0 +1,5 @@
+"""Training: step factory (grad accumulation, cross-pod compressed
+reduction), remat policies, and the pipeline-parallel demo schedule."""
+from .step import TrainState, make_train_step, make_eval_step
+
+__all__ = ["TrainState", "make_train_step", "make_eval_step"]

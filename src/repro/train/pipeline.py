@@ -1,0 +1,120 @@
+"""Pipeline parallelism over a "stage" mesh axis (GPipe schedule).
+
+Production framing: on a 2-pod mesh the "pod" axis can carry pipeline
+stages instead of pure DP — inter-pod links then carry only the (mb, S, d)
+activation edge per tick instead of full gradient all-reduces.  This module
+implements the schedule with ``shard_map`` + ``jax.lax.ppermute``:
+
+  * layer-stacked params are reshaped (L, ...) -> (P, L/P, ...) and sharded
+    over "stage";
+  * microbatches enter stage 0, flow P-1 hops of ppermute, and the loss is
+    computed (masked) on the last stage;
+  * the whole schedule is differentiable (ppermute transposes to the
+    reverse ppermute), so ``jax.grad`` through the shard_map yields the
+    1F1B-equivalent backward wave for free;
+  * bubble fraction = (P-1)/(M+P-1), reported by ``pipeline_efficiency``.
+
+SPMD caveat (DESIGN.md): under shard_map every stage executes the same
+program, so stage-0-only work (embedding) and last-stage-only work (head)
+are computed-and-masked on all stages.  MPMD pipelining would remove that;
+it is orthogonal to the schedule shown here.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["pipeline_loss_fn", "pipeline_efficiency", "split_stages"]
+
+
+def pipeline_efficiency(n_micro: int, n_stages: int) -> float:
+    """Fraction of non-bubble ticks in the GPipe schedule."""
+    return n_micro / (n_micro + n_stages - 1)
+
+
+def split_stages(stacked_params: Any, n_stages: int) -> Any:
+    """(L, ...) layer-stacked params -> (P, L/P, ...)."""
+    def re(x):
+        L = x.shape[0]
+        if L % n_stages:
+            raise ValueError(f"{L} layers not divisible into {n_stages} stages")
+        return x.reshape((n_stages, L // n_stages) + x.shape[1:])
+    return jax.tree.map(re, stacked_params)
+
+
+def pipeline_loss_fn(
+    mesh: Mesh,
+    block_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
+    embed_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
+    loss_fn: Callable[[Any, jnp.ndarray, jnp.ndarray], jnp.ndarray],
+    *,
+    axis: str = "stage",
+) -> Callable:
+    """Build ``loss(params, batch) -> scalar`` running the GPipe schedule.
+
+    params = {"stages": (P, L/P, ...) stacked block params,
+              "embed":  embedding params        (replicated),
+              "head":   head/loss params         (replicated)}
+    batch  = {"tokens": (M, mb, S), "labels": (M, mb, S)} — M microbatches.
+    """
+    n_stages = mesh.shape[axis]
+
+    def staged(params, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        M = tokens.shape[0]
+        sid = jax.lax.axis_index(axis)
+        stage_params = jax.tree.map(lambda x: x[0], params["stages"])
+        perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+        def run_stage(x):
+            def body(carry, lp):
+                return block_fn(lp, carry), None
+            y, _ = jax.lax.scan(body, x, stage_params)
+            return y
+
+        n_ticks = M + n_stages - 1
+        mb, S = tokens.shape[1], tokens.shape[2]
+        d = embed_fn(params["embed"], tokens[0]).shape[-1]
+        buf = jnp.zeros((mb, S, d), embed_fn(params["embed"], tokens[0]).dtype)
+
+        def tick(carry, t):
+            buf, loss_sum, denom = carry
+            # stage 0 injects microbatch t (clamped; masked by validity)
+            m_in = jnp.clip(t, 0, M - 1)
+            injected = embed_fn(params["embed"], jax.lax.dynamic_index_in_dim(
+                tokens, m_in, axis=0, keepdims=False))
+            x = jnp.where(sid == 0, injected, buf)
+            y = run_stage(x)
+            # last stage computes the loss for microbatch t - (P-1)
+            m_out = t - (n_stages - 1)
+            valid = jnp.logical_and(m_out >= 0, m_out < M)
+            lbl = jax.lax.dynamic_index_in_dim(
+                labels, jnp.clip(m_out, 0, M - 1), axis=0, keepdims=False)
+            l = loss_fn(params["head"], y, lbl)
+            is_last = sid == n_stages - 1
+            loss_sum = loss_sum + jnp.where(valid & is_last, l, 0.0)
+            denom = denom + jnp.where(valid & is_last, 1.0, 0.0)
+            # ship activations one stage downstream
+            buf = jax.lax.ppermute(y, axis, perm)
+            return (buf, loss_sum, denom), None
+
+        (buf, loss_sum, denom), _ = jax.lax.scan(
+            tick, (buf, jnp.float32(0), jnp.float32(0)), jnp.arange(n_ticks)
+        )
+        # only the last stage holds the loss; share it with everyone
+        total = jax.lax.psum(loss_sum, axis)
+        count = jax.lax.psum(denom, axis)
+        return total / jnp.maximum(count, 1.0)
+
+    in_specs = (
+        {"stages": P(axis), "embed": P(), "head": P()},
+        {"tokens": P(), "labels": P()},
+    )
+    return shard_map(staged, mesh=mesh, in_specs=in_specs, out_specs=P(),
+                     check_rep=False)

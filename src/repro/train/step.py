@@ -1,0 +1,152 @@
+"""Train-step factory.
+
+Features:
+  * gradient accumulation over ``microbatches`` via ``lax.scan`` (constant
+    memory in the number of microbatches);
+  * optional int8-compressed cross-pod gradient reduction: gradients are
+    computed per-pod under ``shard_map`` (manual over the slow "pod" axis,
+    auto over in-pod "data"/"model"), quantised, all-gathered across pods as
+    int8 and averaged — 4x fewer bytes on the DCN-class inter-pod links;
+  * donated params/opt-state for in-place updates.
+
+The returned function is pure and jit-able; callers (launcher / dry-run)
+attach in/out shardings.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models.transformer import LM
+from ..optim.compression import int8_dequantize, int8_quantize
+from ..optim.optimizers import Optimizer, global_norm
+
+__all__ = ["TrainState", "make_train_step", "make_eval_step"]
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: int = 0
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], m: int) -> Dict[str, jnp.ndarray]:
+    def sp(x):
+        if x.ndim >= 2 and x.shape[0] % m == 0:
+            return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+        if x.ndim >= 2 and x.shape[1] % m == 0:   # (3,B,S) position_ids
+            return jnp.swapaxes(
+                x.reshape((x.shape[0], m, x.shape[1] // m) + x.shape[2:]), 0, 1
+            )
+        raise ValueError(f"cannot split leading batch dim {x.shape} into {m}")
+    return jax.tree.map(sp, batch)
+
+
+def _cross_pod_int8_mean(grads, mesh, rng):
+    """Quantise local-pod gradients, all-gather int8 across 'pod', average.
+
+    Runs inside shard_map (manual over 'pod'); each leaf is the pod-local
+    gradient. Returns the dequantised cross-pod mean."""
+    npod = mesh.shape["pod"]
+
+    def reduce_leaf(g, key):
+        q, scale = int8_quantize(g, key)
+        qs = jax.lax.all_gather(q, "pod")                  # (npod, ...)
+        ss = jax.lax.all_gather(scale, "pod")              # (npod,)
+        deq = (qs.astype(jnp.float32) * ss.reshape((npod,) + (1,) * g.ndim)).sum(0)
+        return (deq / npod).astype(g.dtype)
+
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(rng, len(leaves))
+    return treedef.unflatten([reduce_leaf(g, k) for g, k in zip(leaves, keys)])
+
+
+def make_train_step(
+    model: LM,
+    optimizer: Optimizer,
+    *,
+    microbatches: int = 1,
+    grad_compression: str = "none",     # "none" | "int8" (cross-pod)
+    mesh=None,
+) -> Callable:
+    """Returns ``step(params, opt_state, batch) -> (params, opt_state, metrics)``."""
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        return grads, loss, metrics
+
+    def accumulate(params, batch):
+        if microbatches == 1:
+            return grads_of(params, batch)
+        mb = _split_microbatches(batch, microbatches)
+
+        def body(carry, mbatch):
+            acc, loss_sum = carry
+            g, loss, _ = grads_of(params, mbatch)
+            acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc, g)
+            return (acc, loss_sum + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (acc, loss_sum), _ = jax.lax.scan(body, (zeros, jnp.float32(0)), mb)
+        grads = jax.tree.map(lambda g: (g / microbatches), acc)
+        return grads, loss_sum / microbatches, {}
+
+    use_compression = grad_compression == "int8"
+    if use_compression and (mesh is None or "pod" not in mesh.axis_names):
+        raise ValueError("int8 grad compression needs a mesh with a 'pod' axis")
+
+    def plain_step(params, opt_state, batch):
+        grads, loss, metrics = accumulate(params, batch)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        out = {"loss": loss, "grad_norm": global_norm(grads)}
+        for k, v in (metrics or {}).items():
+            out[k] = v
+        return new_params, new_opt, out
+
+    if not use_compression:
+        return plain_step
+
+    # ---- compressed cross-pod variant -----------------------------------------
+    batch_dims = {"tokens": 0, "labels": 0, "frames": 0, "position_ids": 1}
+
+    def compressed_step(params, opt_state, batch, rng):
+        in_batch_specs = {
+            k: P(*([None] * batch_dims.get(k, 0) + ["pod"]))
+            for k in batch
+        }
+
+        def per_pod(params, batch, rng):
+            grads, loss, _ = accumulate(params, batch)
+            grads = _cross_pod_int8_mean(grads, mesh, rng)
+            loss = jax.lax.pmean(loss, "pod")
+            return grads, loss
+
+        # manual over the slow "pod" axis only; "data"/"model" stay auto
+        grads, loss = jax.shard_map(
+            per_pod, mesh=mesh,
+            in_specs=(P(), in_batch_specs, P()),
+            out_specs=(P(), P()),
+            axis_names={"pod"},
+            check_vma=False,
+        )(params, batch, rng)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss, "grad_norm": global_norm(grads)}
+
+    return compressed_step
+
+
+def make_eval_step(model: LM) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return {"loss": loss, **metrics}
+    return eval_step

@@ -1,0 +1,160 @@
+"""Checkpointing (atomicity, replication, corruption recovery) + FT runtime."""
+import os
+import shutil
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.ft.runtime import FleetMonitor, plan_remesh
+from repro.ft.straggler import StragglerMitigator
+
+
+@pytest.fixture
+def tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4), "b": {"c": jnp.ones((5,)) * 7}}
+
+
+def test_save_restore_roundtrip(tmp_path, tree):
+    save_checkpoint(str(tmp_path), tree, step=3)
+    back, step, _ = load_checkpoint([str(tmp_path)], tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(back["b"]["c"]), np.asarray(tree["b"]["c"]))
+
+
+def test_newest_valid_wins(tmp_path, tree):
+    save_checkpoint(str(tmp_path), tree, step=1)
+    t2 = {"a": tree["a"] + 1, "b": tree["b"]}
+    save_checkpoint(str(tmp_path), t2, step=2)
+    back, step, _ = load_checkpoint([str(tmp_path)], tree)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(t2["a"]))
+
+
+def test_corrupted_replica_skipped(tmp_path, tree):
+    d1, d2 = str(tmp_path / "r1"), str(tmp_path / "r2")
+    save_checkpoint(d1, tree, step=5)
+    save_checkpoint(d2, tree, step=5)
+    # corrupt the newer-listed replica's arrays
+    victim = os.path.join(d1, "step_00000005", "arrays.npz")
+    with open(victim, "r+b") as f:
+        f.seek(200)
+        f.write(b"\x00" * 64)
+    back, step, _ = load_checkpoint([d1, d2], tree)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(tree["a"]))
+
+
+def test_all_corrupt_raises(tmp_path, tree):
+    d1 = str(tmp_path / "r1")
+    save_checkpoint(d1, tree, step=1)
+    shutil.rmtree(os.path.join(d1, "step_00000001"))
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint([d1], tree)
+
+
+def test_shape_mismatch_rejected(tmp_path, tree):
+    save_checkpoint(str(tmp_path), tree, step=1)
+    other = {"a": jnp.zeros((2, 2)), "b": {"c": jnp.zeros((5,))}}
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint([str(tmp_path)], other)
+
+
+def test_manager_replication_and_gc(tmp_path, tree):
+    dirs = [str(tmp_path / f"r{i}") for i in range(3)]
+    mgr = CheckpointManager(replica_dirs=dirs, keep=2, async_save=False)
+    for s in (1, 2, 3):
+        mgr.save(tree, s)
+    for d in dirs:
+        steps = sorted(os.listdir(d))
+        assert steps == ["step_00000002", "step_00000003"]
+    back, step, _ = mgr.restore(tree)
+    assert step == 3
+
+
+def test_manager_async(tmp_path, tree):
+    mgr = CheckpointManager(replica_dirs=[str(tmp_path)], async_save=True)
+    mgr.save(tree, 1)
+    mgr.wait()
+    _, step, _ = mgr.restore(tree)
+    assert step == 1
+
+
+def test_young_daly_interval_scales(tmp_path):
+    flaky = CheckpointManager(replica_dirs=[str(tmp_path)], fleet_lams=[1e-3] * 8)
+    solid = CheckpointManager(replica_dirs=[str(tmp_path)], fleet_lams=[1e-7] * 8)
+    assert flaky.interval < solid.interval
+
+
+# ---------------------------------------------------------------- FT runtime --
+def test_monitor_detects_silent_departure():
+    mon = FleetMonitor(timeout=10.0)
+    mon.join("a", now=0.0)
+    mon.join("b", now=0.0)
+    for t in (5.0, 10.0, 15.0):
+        mon.heartbeat("a", now=t)
+    dead = mon.sweep(now=15.0)
+    assert dead == ["b"]
+    assert mon.alive_pods() == ["a"]
+
+
+def test_monitor_lambda_estimate():
+    mon = FleetMonitor(timeout=5.0)
+    rng = np.random.default_rng(0)
+    lam = 1e-2
+    t = 0.0
+    for i in range(200):
+        mon.join(f"p{i}", cls="spot", now=0.0)
+    deaths = rng.exponential(1 / lam, 200)
+    for t in np.arange(1.0, 120.0, 1.0):
+        for i in range(200):
+            if deaths[i] > t:
+                mon.heartbeat(f"p{i}", now=float(t))
+        mon.sweep(now=float(t))
+    assert mon.lam("spot") == pytest.approx(lam, rel=0.4)
+
+
+def test_remesh_plan_properties():
+    alive = [f"p{i:02d}" for i in range(13)]
+    plan = plan_remesh(alive, model_parallel=4, prev_data_parallel=4)
+    assert plan.mesh_shape == (3, 4)
+    assert len(plan.assignment) == 12
+    assert len(plan.dropped_pods) == 1
+    coords = [c for _, c in plan.assignment]
+    assert len(set(coords)) == len(coords)          # bijective
+    assert plan.batch_reshard
+
+
+def test_remesh_insufficient_pods():
+    with pytest.raises(ValueError):
+        plan_remesh(["a", "b"], model_parallel=4)
+
+
+@given(n_alive=st.integers(4, 64), mp=st.sampled_from([1, 2, 4]))
+@settings(max_examples=40, deadline=None)
+def test_remesh_plan_invariants(n_alive, mp):
+    alive = [f"p{i:03d}" for i in range(n_alive)]
+    plan = plan_remesh(alive, model_parallel=mp)
+    data, model = plan.mesh_shape
+    assert model == mp
+    assert data * model <= n_alive
+    assert data * model + len(plan.dropped_pods) == n_alive
+    # deterministic: same input -> same plan
+    assert plan == plan_remesh(list(reversed(alive)), model_parallel=mp)
+
+
+def test_straggler_backup_on_flaky_primary():
+    mit = StragglerMitigator(beta=0.01, gamma=2)
+    d = mit.decide([100.0, 105.0, 110.0], [5e-3, 1e-7, 1e-7])
+    assert d.primary == 0                      # fastest
+    assert len(d.backups) >= 1                 # but flaky -> backup launched
+    assert d.pred_fail < 0.05
+
+
+def test_straggler_no_backup_when_reliable():
+    mit = StragglerMitigator(beta=0.05, gamma=2)
+    d = mit.decide([100.0, 105.0], [1e-9, 1e-9])
+    assert d.backups == ()

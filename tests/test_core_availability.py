@@ -1,0 +1,74 @@
+"""Exponential availability model, lambda MLE, Young/Daly cadence."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.availability import (
+    availability,
+    expected_makespan_with_restarts,
+    fit_failure_rate,
+    gang_failure_rate,
+    prob_fail_during,
+    sample_lifetime,
+    young_daly_interval,
+)
+
+
+def test_availability_decay():
+    lam = 1e-3
+    assert availability(lam, 0.0) == pytest.approx(1.0)
+    assert availability(lam, 1000.0) == pytest.approx(np.exp(-1.0))
+    assert availability(lam, 100.0) > availability(lam, 200.0)
+
+
+def test_prob_fail_memoryless():
+    lam = 2e-4
+    assert prob_fail_during(lam, 100.0) == pytest.approx(1 - np.exp(-0.02))
+    assert prob_fail_during(lam, 0.0) == 0.0
+
+
+def test_lifetime_sampling_mean():
+    rng = np.random.default_rng(0)
+    lam = 1e-2
+    xs = [sample_lifetime(lam, rng) for _ in range(4000)]
+    assert np.mean(xs) == pytest.approx(1 / lam, rel=0.1)
+    assert sample_lifetime(0.0, rng) == float("inf")
+
+
+def test_fit_failure_rate_mle():
+    rng = np.random.default_rng(1)
+    lam = 5e-3
+    # observe 500 devices for their full lifetimes (uncensored)
+    lifetimes = rng.exponential(1 / lam, 500)
+    lam_hat = fit_failure_rate(lifetimes, [False] * 500)
+    assert lam_hat == pytest.approx(lam, rel=0.15)
+
+
+def test_young_daly_is_near_optimal():
+    """Numeric check: Daly's expected makespan is minimised near sqrt(2C/l)."""
+    lam, C, work = 1e-4, 30.0, 100000.0
+    tau_star = young_daly_interval(lam, C)
+    best = expected_makespan_with_restarts(work, lam, C, interval=tau_star)
+    for tau in (tau_star / 4, tau_star / 2, tau_star * 2, tau_star * 4):
+        other = expected_makespan_with_restarts(work, lam, C, interval=tau)
+        assert best <= other * 1.001
+
+
+@given(st.lists(st.floats(1e-7, 1e-3), min_size=1, max_size=64))
+@settings(max_examples=40, deadline=None)
+def test_gang_rate_additive_and_bounds(lams):
+    total = gang_failure_rate(lams)
+    assert total == pytest.approx(sum(lams), rel=1e-9)
+    # P(gang fails) >= max member P, <= sum of member Ps
+    h = 3600.0
+    pg = prob_fail_during(total, h)
+    members = [prob_fail_during(l, h) for l in lams]
+    assert pg >= max(members) - 1e-12
+    assert pg <= min(sum(members), 1.0) + 1e-12
+
+
+def test_makespan_monotone_in_lambda():
+    C, work = 30.0, 50000.0
+    m1 = expected_makespan_with_restarts(work, 1e-5, C)
+    m2 = expected_makespan_with_restarts(work, 1e-4, C)
+    assert m2 > m1 >= work

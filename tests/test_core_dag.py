@@ -1,0 +1,88 @@
+"""DAG staging + validation, including hypothesis property tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dag import AppDAG, TaskSpec, app_stage, topological_order, validate_dag
+
+
+def _dag(edges, n):
+    """Build an AppDAG over n tasks named t0..t{n-1} with dep edges (i->j)."""
+    deps = {j: [] for j in range(n)}
+    for i, j in edges:
+        deps[j].append(f"t{i}")
+    return AppDAG.from_tasks(
+        "test", [TaskSpec(f"t{j}", ttype=0, deps=tuple(deps[j])) for j in range(n)]
+    )
+
+
+def test_linear_chain_stages():
+    dag = _dag([(0, 1), (1, 2), (2, 3)], 4)
+    assert dag.n_stages == 4
+    assert [dag.stage_of[f"t{i}"] for i in range(4)] == [0, 1, 2, 3]
+
+
+def test_diamond_stages():
+    #   t0 -> t1, t0 -> t2, {t1,t2} -> t3
+    dag = _dag([(0, 1), (0, 2), (1, 3), (2, 3)], 4)
+    assert dag.stage_of["t0"] == 0
+    assert dag.stage_of["t1"] == dag.stage_of["t2"] == 1
+    assert dag.stage_of["t3"] == 2
+    assert dag.stages[1] == ["t1", "t2"]
+
+
+def test_longest_path_not_bfs_depth():
+    # t0->t2 and t0->t1->t2: stage(t2) must be 2 (longest path), not 1
+    dag = _dag([(0, 2), (0, 1), (1, 2)], 3)
+    assert dag.stage_of["t2"] == 2
+
+
+def test_cycle_detection():
+    with pytest.raises(ValueError, match="cycle"):
+        _dag([(0, 1), (1, 2), (2, 0)], 3)
+
+
+def test_dangling_dep():
+    with pytest.raises(ValueError, match="unknown task"):
+        AppDAG.from_tasks("x", [TaskSpec("a", ttype=0, deps=("ghost",))])
+
+
+def test_relabel_preserves_structure():
+    dag = _dag([(0, 1), (1, 2)], 3)
+    r = dag.relabel("#7")
+    assert r.n_tasks == 3 and r.n_stages == 3
+    assert "t1#7" in r.tasks and r.tasks["t2#7"].deps == ("t1#7",)
+
+
+@st.composite
+def random_dags(draw):
+    n = draw(st.integers(2, 12))
+    edges = []
+    for j in range(1, n):
+        # edges only i -> j with i < j: guaranteed acyclic
+        parents = draw(st.lists(st.integers(0, j - 1), max_size=3, unique=True))
+        edges.extend((i, j) for i in parents)
+    return edges, n
+
+
+@given(random_dags())
+@settings(max_examples=60, deadline=None)
+def test_staging_respects_dependencies(args):
+    edges, n = args
+    dag = _dag(edges, n)
+    # property 1: every task is staged strictly after all its deps
+    for t in dag.tasks.values():
+        for d in t.deps:
+            assert dag.stage_of[t.name] > dag.stage_of[d]
+    # property 2: stage = length of longest path from a source
+    for t in dag.tasks.values():
+        if t.deps:
+            assert dag.stage_of[t.name] == 1 + max(dag.stage_of[d] for d in t.deps)
+        else:
+            assert dag.stage_of[t.name] == 0
+    # property 3: stages partition the tasks
+    assert sorted(x for s in dag.stages for x in s) == sorted(dag.tasks)
+    # property 4: topological order is consistent
+    order = {name: i for i, name in enumerate(topological_order(dag.tasks))}
+    for t in dag.tasks.values():
+        for d in t.deps:
+            assert order[d] < order[t.name]

@@ -1,0 +1,80 @@
+"""Interference model (Eq. 1) unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.interference import InterferenceModel, fit_linear_interference
+
+
+def _model(P=3, N=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return InterferenceModel(
+        base=rng.uniform(0.05, 0.5, (P, N)),
+        slope=rng.uniform(0.0, 0.1, (P, N, N)),
+    )
+
+
+def test_estimate_matches_eq1():
+    m = _model()
+    counts = np.array([1.0, 0.0, 2.0, 3.0])
+    got = m.estimate(1, 2, counts)
+    want = m.base[1, 2] + float(m.slope[1, 2] @ counts)
+    assert got == pytest.approx(want)
+
+
+def test_additivity():
+    """Paper Fig. 4: f(T_i, j*T_a + k*T_b) == f(..j*T_a) + f(..k*T_b) - base."""
+    m = _model()
+    ca = np.array([2.0, 0.0, 0.0, 0.0])
+    cb = np.array([0.0, 0.0, 3.0, 0.0])
+    lhs = m.estimate(0, 1, ca + cb)
+    rhs = m.estimate(0, 1, ca) + m.estimate(0, 1, cb) - m.base[0, 1]
+    assert lhs == pytest.approx(rhs)
+
+
+def test_vectorised_consistency():
+    m = _model()
+    classes = np.array([0, 2, 1])
+    counts = np.random.default_rng(1).uniform(0, 3, (3, 4))
+    vec = m.estimate_devices(classes, 3, counts)
+    for i in range(3):
+        assert vec[i] == pytest.approx(m.estimate(int(classes[i]), 3, counts[i]))
+
+
+def test_pair_plot_is_linear():
+    m = _model()
+    plot = m.pair_plot(0, 1, 2, k_max=5)
+    diffs = np.diff(plot)
+    assert np.allclose(diffs, diffs[0])
+    assert plot[0] == pytest.approx(m.base[0, 1])
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        InterferenceModel(base=np.ones((2, 3)), slope=np.ones((2, 3, 4)))
+    with pytest.raises(ValueError):
+        InterferenceModel(base=-np.ones((2, 3)), slope=np.ones((2, 3, 3)))
+
+
+@given(
+    m=st.floats(0.0, 5.0),
+    c=st.floats(0.01, 5.0),
+    n=st.integers(3, 20),
+)
+@settings(max_examples=50, deadline=None)
+def test_fit_recovers_exact_line(m, c, n):
+    k = np.arange(n, dtype=float)
+    lat = m * k + c
+    m_hat, c_hat, r2 = fit_linear_interference(k, lat)
+    assert m_hat == pytest.approx(m, abs=1e-8)
+    assert c_hat == pytest.approx(c, abs=1e-8)
+    assert r2 == pytest.approx(1.0, abs=1e-9)
+
+
+def test_fit_noisy_r2():
+    rng = np.random.default_rng(0)
+    k = np.arange(30, dtype=float)
+    lat = 0.2 * k + 1.0 + rng.normal(0, 0.05, 30)
+    m_hat, c_hat, r2 = fit_linear_interference(k, lat)
+    assert m_hat == pytest.approx(0.2, abs=0.02)
+    assert r2 > 0.95

@@ -1,0 +1,171 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.ops import attention, decode_attention, rwkv6
+from repro.kernels.ref import attention_ref, decode_attention_ref, rwkv6_ref
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dt):
+    return dict(atol=3e-2, rtol=3e-2) if dt == jnp.bfloat16 else dict(atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("B,S,Hq,Hk,D", [
+    (2, 256, 8, 2, 64),
+    (1, 256, 4, 4, 128),
+    (2, 512, 8, 1, 64),
+    (1, 128, 2, 2, 32),
+    (1, 384, 6, 6, 64),       # whisper-tiny head geometry
+    (1, 256, 16, 1, 128),     # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal_sweep(B, S, Hq, Hk, D, dtype):
+    q = jnp.asarray(RNG.standard_normal((B, S, Hq, D)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, S, Hk, D)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, S, Hk, D)), dtype)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [64, 128, 256])
+def test_flash_attention_local_window(window):
+    B, S, Hq, Hk, D = 1, 512, 4, 2, 64
+    q = jnp.asarray(RNG.standard_normal((B, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, Hk, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, Hk, D)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+def test_flash_attention_non_causal():
+    B, S, Hq, Hk, D = 2, 128, 2, 2, 32
+    q = jnp.asarray(RNG.standard_normal((B, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, Hk, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, Hk, D)), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, interpret=True)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+def test_flash_attention_block_size_invariance():
+    B, S, Hq, Hk, D = 1, 512, 4, 2, 64
+    q = jnp.asarray(RNG.standard_normal((B, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, Hk, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, Hk, D)), jnp.float32)
+    a = flash_attention(q, k, v, block_q=128, block_k=128, interpret=True)
+    b = flash_attention(q, k, v, block_q=64, block_k=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("B,C,Hq,Hk,D", [
+    (2, 512, 8, 2, 64),
+    (3, 256, 4, 4, 128),
+    (1, 1024, 16, 1, 64),
+    (2, 256, 8, 8, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(B, C, Hq, Hk, D, dtype):
+    q = jnp.asarray(RNG.standard_normal((B, Hq, D)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, C, Hk, D)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, C, Hk, D)), dtype)
+    lengths = jnp.asarray(RNG.integers(1, C, B), jnp.int32)
+    out = flash_decode(q, k, v, lengths, block_k=128, interpret=True)
+    ref = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_decode_length_masking():
+    """Entries past `lengths` must have zero influence."""
+    B, C, Hq, Hk, D = 1, 256, 2, 2, 32
+    q = jnp.asarray(RNG.standard_normal((B, Hq, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, C, Hk, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, C, Hk, D)), jnp.float32)
+    lengths = jnp.asarray([100], jnp.int32)
+    out1 = flash_decode(q, k, v, lengths, interpret=True, block_k=128)
+    k2 = k.at[:, 100:].set(999.0)
+    v2 = v.at[:, 100:].set(-999.0)
+    out2 = flash_decode(q, k2, v2, lengths, interpret=True, block_k=128)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+@pytest.mark.parametrize("B,T,H,N,chunk", [
+    (2, 128, 2, 32, 32),
+    (1, 256, 4, 64, 64),
+    (2, 64, 1, 16, 16),
+    (1, 128, 2, 64, 128),      # chunk == T
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_chunked_sweep(B, T, H, N, chunk, dtype):
+    r = jnp.asarray(RNG.standard_normal((B, T, H, N)) * 0.5, dtype)
+    k = jnp.asarray(RNG.standard_normal((B, T, H, N)) * 0.5, dtype)
+    v = jnp.asarray(RNG.standard_normal((B, T, H, N)), dtype)
+    w = jnp.asarray(RNG.uniform(0.2, 0.999, (B, T, H, N)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((H, N)) * 0.2, jnp.float32)
+    S0 = jnp.asarray(RNG.standard_normal((B, H, N, N)) * 0.1, jnp.float32)
+    y, sT = rwkv6_scan(r, k, v, w.astype(dtype), u, S0, chunk=chunk, interpret=True)
+    yr, sr = rwkv6_ref(r, k, v, w.astype(dtype), u, S0)
+    tol = dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sr), **tol)
+
+
+def test_rwkv6_state_carry_composes():
+    """Running two halves with carried state == one full run."""
+    B, T, H, N = 1, 128, 2, 32
+    r = jnp.asarray(RNG.standard_normal((B, T, H, N)) * 0.5, jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, T, H, N)) * 0.5, jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, T, H, N)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.3, 0.99, (B, T, H, N)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((H, N)) * 0.2, jnp.float32)
+    S0 = jnp.zeros((B, H, N, N), jnp.float32)
+    y_full, s_full = rwkv6_ref(r, k, v, w, u, S0)
+    h = T // 2
+    y1, s1 = rwkv6_ref(r[:, :h], k[:, :h], v[:, :h], w[:, :h], u, S0)
+    y2, s2 = rwkv6_ref(r[:, h:], k[:, h:], v[:, h:], w[:, h:], u, s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=1e-4)
+
+
+@given(
+    s_blocks=st.integers(1, 4),
+    hq=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2]),
+    d=st.sampled_from([32, 64]),
+)
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_property(s_blocks, hq, g, d):
+    """Hypothesis sweep: kernel == oracle for arbitrary small geometries."""
+    S = 128 * s_blocks
+    Hk, Hq = hq, hq * g
+    rng = np.random.default_rng(42)
+    q = jnp.asarray(rng.standard_normal((1, S, Hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, S, Hk, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, S, Hk, d)), jnp.float32)
+    out = flash_attention(q, k, v, interpret=True)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5, rtol=5e-5)
+
+
+def test_ops_wrappers_dispatch_to_ref_on_cpu():
+    B, S, Hq, Hk, D = 1, 128, 2, 2, 32
+    q = jnp.asarray(RNG.standard_normal((B, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, Hk, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, Hk, D)), jnp.float32)
+    out = attention(q, k, v, impl="auto")       # == ref on CPU
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    out_i = attention(q, k, v, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(out_i), np.asarray(ref), atol=5e-5)

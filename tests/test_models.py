@@ -1,0 +1,168 @@
+"""Per-architecture smoke tests (reduced configs) + model-level invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import LM, reduced
+from repro.models.attention import make_mla_cache, mla_apply, mla_init
+from repro.models.moe import moe_apply, moe_init
+
+B, S = 2, 16
+RNG = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, rng=RNG, batch=B, seq=S):
+    batch_d = {
+        "tokens": jax.random.randint(rng, (batch, seq), 0, cfg.vocab),
+        "labels": jax.random.randint(rng, (batch, seq), 0, cfg.vocab),
+    }
+    if cfg.enc_dec:
+        batch_d["frames"] = jax.random.normal(rng, (batch, cfg.enc_len, cfg.d_model))
+    if cfg.needs_position_ids:
+        batch_d["position_ids"] = jnp.broadcast_to(
+            jnp.arange(seq)[None, None], (3, batch, seq)
+        ).astype(jnp.int32)
+    return batch_d
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Reduced config of the same family: one forward/train step on CPU,
+    asserting output shapes + no NaNs (per the assignment)."""
+    cfg = reduced(get_config(arch))
+    model = LM(cfg)
+    params = model.init(RNG)
+    batch = make_batch(cfg)
+
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_prefill_decode(arch):
+    cfg = reduced(get_config(arch))
+    model = LM(cfg)
+    params = model.init(RNG)
+    batch = make_batch(cfg)
+    caches = model.init_cache(B, 32)
+    logits, caches = jax.jit(model.prefill)(params, batch, caches)
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    pos_ids = (jnp.full((3, B, 1), S, jnp.int32) if cfg.needs_position_ids else None)
+    lg, caches = jax.jit(model.decode_step)(
+        params, jnp.argmax(logits, -1).astype(jnp.int32),
+        jnp.full((B,), S, jnp.int32), caches, pos_ids)
+    assert lg.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(lg, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "qwen1.5-0.5b", "rwkv6-3b",
+                                  "recurrentgemma-9b", "minitron-8b",
+                                  "command-r-plus-104b", "qwen2-vl-72b"])
+def test_decode_matches_full_forward(arch):
+    """Prefill S-1 tokens then decode token S-1 == full forward at S-1.
+    (MoE archs excluded: capacity-drop patterns differ between shapes.)"""
+    cfg = reduced(get_config(arch))
+    model = LM(cfg)
+    params = model.init(RNG)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    caches = model.init_cache(B, 32)
+    pre_batch = {"tokens": toks[:, : S - 1]}
+    if cfg.needs_position_ids:
+        pre_batch["position_ids"] = jnp.broadcast_to(
+            jnp.arange(S - 1)[None, None], (3, B, S - 1)).astype(jnp.int32)
+    _, caches = jax.jit(model.prefill)(params, pre_batch, caches)
+    pos_ids = (jnp.full((3, B, 1), S - 1, jnp.int32)
+               if cfg.needs_position_ids else None)
+    lg_dec, _ = jax.jit(model.decode_step)(
+        params, toks[:, S - 1], jnp.full((B,), S - 1, jnp.int32), caches, pos_ids)
+
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    pid = (jnp.broadcast_to(jnp.arange(S)[None, None], (3, B, S)).astype(jnp.int32)
+           if cfg.needs_position_ids else None)
+    hidden, _, _ = model.backbone(params, toks, pos, position_ids=pid)
+    lg_full = model.logits(params, hidden)[:, -1]
+    np.testing.assert_allclose(np.asarray(lg_dec), np.asarray(lg_full),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_moe_sort_equals_einsum_dispatch():
+    cfg = reduced(get_config("deepseek-v3-671b"))
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    p = moe_init(RNG, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 64, cfg.d_model), jnp.float32)
+    ys, aux_s = moe_apply(cfg, p, x, dispatch="sort")
+    ye, aux_e = moe_apply(cfg, p, x, dispatch="einsum")
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(ye), atol=1e-4)
+    assert float(aux_s) == pytest.approx(float(aux_e), rel=1e-5)
+
+
+def test_moe_router_gates_normalised():
+    cfg = reduced(get_config("qwen2-moe-a2.7b"))
+    from repro.models.moe import _router
+    p = moe_init(RNG, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(4), (32, cfg.d_model), jnp.float32)
+    gates, idx, probs = _router(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, atol=1e-3)
+    assert int(idx.max()) < cfg.moe.n_experts
+    np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, atol=1e-4)
+
+
+def test_mla_absorbed_equals_expanded():
+    cfg = reduced(get_config("deepseek-v3-671b"))
+    p = mla_init(RNG, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 12, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(12)[None], (2, 12)).astype(jnp.int32)
+    y_exp, _ = mla_apply(cfg, p, x, pos, absorbed=False)
+    y_abs, _ = mla_apply(cfg, p, x, pos, absorbed=True)
+    np.testing.assert_allclose(np.asarray(y_exp), np.asarray(y_abs), atol=1e-4)
+
+
+def test_mla_cache_is_compressed():
+    """The MLA cache must store the latent, not full K/V heads."""
+    cfg = reduced(get_config("deepseek-v3-671b"))
+    cache = make_mla_cache(cfg, batch=2, capacity=32, n_layers=1)
+    assert cache["ckv"].shape[-1] == cfg.mla.kv_lora_rank
+    full_kv_floats = 2 * cfg.n_heads * cfg.mla.v_head_dim
+    latent_floats = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+    assert latent_floats < full_kv_floats
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_matches_init(arch):
+    """Analytic param_count (used for roofline MODEL_FLOPS) vs real init."""
+    cfg = reduced(get_config(arch))
+    model = LM(cfg)
+    params = jax.eval_shape(model.init, RNG)
+    actual = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    predicted = cfg.param_count()
+    assert predicted == pytest.approx(actual, rel=0.15), (predicted, actual)
+
+
+def test_local_window_attention_masks_past():
+    """Tokens beyond the window must not influence the output."""
+    cfg = reduced(get_config("recurrentgemma-9b"))
+    model = LM(cfg)
+    params = model.init(RNG)
+    w = cfg.attn_window
+    seq = 3 * w
+    toks = jax.random.randint(jax.random.PRNGKey(5), (1, seq), 0, cfg.vocab)
+    pos = jnp.arange(seq)[None].astype(jnp.int32)
+    h1, _, _ = model.backbone(params, toks, pos)
+    # perturb the FIRST token: the recurrent path carries information forward,
+    # so instead check pure attention masking via the gqa mask directly
+    from repro.models.attention import _mask_bias
+    bias = _mask_bias(pos, pos, causal=True, window=w)
+    i, j = seq - 1, seq - 1 - w
+    assert bias[0, i, j] < -1e29          # outside window
+    assert bias[0, i, j + 1] == 0.0       # inside window
+    assert bias[0, 0, 1] < -1e29          # causal

@@ -1,0 +1,154 @@
+"""IBDASH Algorithm 1 + baseline schedulers: placement semantics."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import LAVEA, LaTS, LaTSModel, Petrel, RandomScheduler, RoundRobinScheduler
+from repro.core.cluster import ClusterState, Device
+from repro.core.dag import AppDAG, TaskSpec
+from repro.core.interference import InterferenceModel
+from repro.core.orchestrator import IBDASH, IBDASHConfig
+
+GB = 1e9
+
+
+def make_cluster(n=4, lam=(1e-6, 1e-6, 1e-6, 1e-6), base=(0.1, 0.2, 0.3, 0.4),
+                 mem=8 * GB, bw=100e6):
+    """n devices, each its own class with distinct base latency, 1 task type."""
+    model = InterferenceModel(
+        base=np.array(base)[:, None],
+        slope=np.full((n, 1, 1), 0.05),
+    )
+    devices = [
+        Device(did=i, cls=i, mem_total=mem, lam=lam[i], bandwidth=bw)
+        for i in range(n)
+    ]
+    return ClusterState(devices=devices, model=model, horizon=100.0, dt=0.05)
+
+
+def single_task_app(mem=0.0, model_id=None, model_bytes=0.0):
+    return AppDAG.from_tasks("app", [TaskSpec(
+        "t0", ttype=0, mem_bytes=mem, model_id=model_id, model_bytes=model_bytes,
+    )])
+
+
+def test_picks_min_latency_device():
+    cluster = make_cluster()
+    p = IBDASH().place(single_task_app(), cluster, now=0.0)
+    assert p.feasible
+    assert p.tasks["t0"].replicas[0].did == 0          # base 0.1 is fastest
+
+
+def test_interference_steers_away_from_loaded_device():
+    cluster = make_cluster()
+    # pre-load device 0 with 10 concurrent tasks: 0.1 + 10*0.05 = 0.6 > 0.2
+    cluster.add_interval(0, 0, 0.0, 50.0, w=10)
+    p = IBDASH().place(single_task_app(), cluster, now=0.0)
+    assert p.tasks["t0"].replicas[0].did == 1
+
+
+def test_memory_constraint_excludes_devices():
+    cluster = make_cluster(mem=1 * GB)
+    app = single_task_app(mem=2 * GB)
+    p = IBDASH().place(app, cluster, now=0.0)
+    assert not p.feasible and p.infeasible_task == "t0"
+
+
+def test_model_upload_latency_considered():
+    cluster = make_cluster(bw=10e6)
+    # 100 MB model: 10 s upload everywhere; but cache it on slow device 3
+    cluster.devices[3].admit_model("m", 100e6)
+    app = single_task_app(model_id="m", model_bytes=100e6)
+    p = IBDASH().place(app, cluster, now=0.0)
+    # 0.4s exec on dev3 beats 0.1s + 10s upload on dev0
+    assert p.tasks["t0"].replicas[0].did == 3
+    assert p.tasks["t0"].replicas[0].est_upload == 0.0
+
+
+def test_transfer_latency_colocates_children():
+    cluster = make_cluster(bw=10e6)   # 50 MB transfer = 5 s
+    app = AppDAG.from_tasks("app", [
+        TaskSpec("parent", ttype=0, out_bytes=50e6),
+        TaskSpec("child", ttype=0, deps=("parent",)),
+    ])
+    p = IBDASH().place(app, cluster, now=0.0)
+    assert p.tasks["child"].replicas[0].did == p.tasks["parent"].replicas[0].did
+
+
+def test_replication_triggers_on_flaky_devices():
+    # all devices very flaky (F ~ 5% per 0.1s task, above beta=1%) and
+    # near-equal in latency, so the weighted score accepts the replica
+    # (a 2x-slower replica would be correctly rejected by line 34)
+    cluster = make_cluster(lam=(5e-1,) * 4, base=(0.1, 0.101, 0.102, 0.103))
+    cfg = IBDASHConfig(alpha=0.2, beta=0.01, gamma=3)
+    p = IBDASH(cfg).place(single_task_app(), cluster, now=0.0)
+    tp = p.tasks["t0"]
+    assert len(tp.replicas) > 1
+    assert tp.pred_fail < tp.replicas[0].pred_fail      # replication reduced F
+    # combined failure prob = product over replicas
+    prod = np.prod([r.pred_fail for r in tp.replicas])
+    assert tp.pred_fail == pytest.approx(prod)
+
+
+def test_no_replication_on_reliable_devices():
+    cluster = make_cluster(lam=(1e-9,) * 4)
+    p = IBDASH(IBDASHConfig(beta=0.1, gamma=3)).place(single_task_app(), cluster, 0.0)
+    assert len(p.tasks["t0"].replicas) == 1
+
+
+def test_gamma_caps_replication():
+    cluster = make_cluster(lam=(9e-2,) * 4)
+    cfg = IBDASHConfig(alpha=0.0, beta=1e-9, gamma=2)   # always wants more
+    p = IBDASH(cfg).place(single_task_app(), cluster, 0.0)
+    assert len(p.tasks["t0"].replicas) <= 1 + 2
+
+
+def test_placement_commits_talloc():
+    cluster = make_cluster()
+    IBDASH().place(single_task_app(), cluster, now=0.0)
+    assert cluster.counts_at(0.01)[0, 0] >= 1           # interval recorded
+
+
+def test_eq3_stage_sum():
+    cluster = make_cluster()
+    app = AppDAG.from_tasks("app", [
+        TaskSpec("a", ttype=0),
+        TaskSpec("b", ttype=0, deps=("a",)),
+        TaskSpec("c", ttype=0, deps=("b",)),
+    ])
+    p = IBDASH().place(app, cluster, now=0.0)
+    per_stage = [p.tasks[t].est_latency for t in ("a", "b", "c")]
+    assert p.est_latency == pytest.approx(sum(per_stage), rel=1e-6)
+
+
+def test_lavea_picks_shortest_queue():
+    cluster = make_cluster()
+    cluster.add_interval(0, 0, 0.0, 50.0, w=5)
+    cluster.add_interval(1, 0, 0.0, 50.0, w=3)
+    cluster.add_interval(2, 0, 0.0, 50.0, w=1)
+    cluster.add_interval(3, 0, 0.0, 50.0, w=2)
+    p = LAVEA(seed=0).place(single_task_app(), cluster, now=0.0)
+    assert p.tasks["t0"].replicas[0].did == 2
+
+
+def test_round_robin_cycles():
+    cluster = make_cluster()
+    rr = RoundRobinScheduler()
+    dids = [rr.place(single_task_app(), cluster, 0.0).tasks["t0"].replicas[0].did
+            for _ in range(4)]
+    assert dids == [0, 1, 2, 3]
+
+
+def test_petrel_power_of_two():
+    cluster = make_cluster()
+    # device 0 fastest: petrel must never pick a device slower than BOTH samples
+    p = Petrel(seed=1)
+    for _ in range(10):
+        placement = p.place(single_task_app(), cluster, 0.0)
+        assert placement.feasible
+
+
+def test_baselines_single_replica():
+    cluster = make_cluster(lam=(5e-2,) * 4)
+    for sched in (RandomScheduler(0), RoundRobinScheduler(0), LAVEA(0), Petrel(0)):
+        p = sched.place(single_task_app(), cluster, 0.0)
+        assert len(p.tasks["t0"].replicas) == 1          # no replication in baselines

@@ -1,0 +1,80 @@
+"""Discrete-event simulator: determinism, accounting, paper-level behaviour."""
+import numpy as np
+import pytest
+
+from repro.sim import SimConfig, make_profile, run_one
+from repro.sim.apps import all_apps, lightgbm_app, mapreduce_app, matrix_app, video_app
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return make_profile(seed=0)
+
+
+@pytest.fixture(scope="module")
+def mini_cfg():
+    return SimConfig(n_cycles=2, instances_per_cycle=120, scenario="ped", seed=3)
+
+
+def test_apps_have_expected_structure():
+    lg = lightgbm_app()
+    assert lg.n_stages == 4 and lg.n_tasks == 9
+    mr = mapreduce_app()
+    assert mr.n_stages == 2 and mr.n_tasks == 6
+    va = video_app()
+    assert va.n_stages == 3
+    mx = matrix_app()
+    assert mx.n_stages == 3 and mx.n_tasks == 4
+
+
+def test_determinism(profile, mini_cfg):
+    a = run_one("ibdash", mini_cfg, profile)
+    b = run_one("ibdash", mini_cfg, profile)
+    assert a.avg_service_time == pytest.approx(b.avg_service_time)
+    assert a.prob_failure == pytest.approx(b.prob_failure)
+    assert (a.load_per_device == b.load_per_device).all()
+
+
+def test_every_instance_resolves(profile, mini_cfg):
+    res = run_one("random", mini_cfg, profile)
+    assert res.n == mini_cfg.n_cycles * mini_cfg.instances_per_cycle
+    for r in res.instances:
+        assert r.failed or np.isfinite(r.service_time)
+        assert np.isfinite(r.finished)
+
+
+def test_service_time_positive(profile, mini_cfg):
+    res = run_one("lavea", mini_cfg, profile)
+    ok = [r.service_time for r in res.instances if not r.failed]
+    assert len(ok) > 0 and min(ok) > 0
+
+
+def test_ibdash_beats_random(profile):
+    cfg = SimConfig(n_cycles=3, instances_per_cycle=250, scenario="ped", seed=0)
+    ib = run_one("ibdash", cfg, profile)
+    rd = run_one("random", cfg, profile)
+    assert ib.avg_service_time < rd.avg_service_time
+    assert ib.prob_failure <= rd.prob_failure
+
+
+def test_replication_only_ibdash(profile, mini_cfg):
+    ib = run_one("ibdash", mini_cfg, profile)
+    rd = run_one("petrel", mini_cfg, profile)
+    assert all(r.n_replicas == 0 for r in rd.instances)
+    assert any(r.n_replicas >= 0 for r in ib.instances)
+
+
+def test_per_app_metrics(profile, mini_cfg):
+    res = run_one("lavea", mini_cfg, profile)
+    per = res.per_app()
+    assert set(per) <= {"lightgbm", "mapreduce", "video", "matrix"}
+    for name, (svc, pf) in per.items():
+        assert 0 <= pf <= 1
+
+
+def test_ced_fails_less_than_ped(profile):
+    cfg = SimConfig(n_cycles=3, instances_per_cycle=200, seed=1)
+    from dataclasses import replace
+    ped = run_one("lavea", replace(cfg, scenario="ped"), profile)
+    ced = run_one("lavea", replace(cfg, scenario="ced"), profile)
+    assert ced.prob_failure <= ped.prob_failure

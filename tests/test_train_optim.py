@@ -1,0 +1,128 @@
+"""Optimizers, schedules, grad accumulation, compression, train step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import LM, reduced
+from repro.optim.compression import (
+    compress_gradients,
+    decompress_gradients,
+    int8_dequantize,
+    int8_quantize,
+)
+from repro.optim.optimizers import Adafactor, AdamW, clip_by_global_norm, global_norm
+from repro.optim.schedules import cosine_with_warmup, linear_warmup
+from repro.train.step import make_train_step
+
+
+def _quad_problem():
+    target = jnp.asarray(np.random.default_rng(0).standard_normal((16, 16)), jnp.float32)
+    params = {"w": jnp.zeros((16, 16), jnp.float32)}
+
+    def loss(p):
+        return jnp.mean((p["w"] - target) ** 2)
+
+    return params, loss
+
+
+@pytest.mark.parametrize("opt", [
+    AdamW(lr=0.05),
+    AdamW(lr=0.05, state_dtype="bfloat16"),
+    Adafactor(lr=0.5, min_dim_size_to_factor=8),
+])
+def test_optimizer_reduces_quadratic(opt):
+    params, loss = _quad_problem()
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params)
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_adafactor_state_is_factored():
+    opt = Adafactor(min_dim_size_to_factor=8)
+    params = {"big": jnp.zeros((64, 32)), "small": jnp.zeros((4,))}
+    st_ = opt.init(params)
+    assert set(st_["v"]["big"]) == {"vr", "vc"}
+    assert st_["v"]["big"]["vr"].shape == (64,)
+    assert st_["v"]["big"]["vc"].shape == (32,)
+    assert set(st_["v"]["small"]) == {"v"}
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((10,)) * 3.0}
+    clipped, n = clip_by_global_norm(tree, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    assert float(n) == pytest.approx(np.sqrt(90.0), rel=1e-5)
+
+
+def test_schedules():
+    warm = linear_warmup(1.0, 10)
+    assert float(warm(jnp.int32(5))) == pytest.approx(0.5)
+    assert float(warm(jnp.int32(100))) == pytest.approx(1.0)
+    cos = cosine_with_warmup(1.0, 10, 100, final_frac=0.1)
+    assert float(cos(jnp.int32(100))) == pytest.approx(0.1, abs=1e-6)
+    assert float(cos(jnp.int32(10))) == pytest.approx(1.0, abs=0.05)
+
+
+@given(st.floats(0.01, 100.0), st.integers(1, 5))
+@settings(max_examples=30, deadline=None)
+def test_int8_quantization_error_bound(scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(128) * scale, jnp.float32)
+    q, s = int8_quantize(x)
+    back = int8_dequantize(q, s)
+    # deterministic rounding error is at most half a quantization step
+    assert float(jnp.max(jnp.abs(back - x))) <= float(s) * 0.5 + 1e-7
+
+
+def test_stochastic_rounding_unbiased():
+    x = jnp.full((20000,), 0.3, jnp.float32)
+    q, s = int8_quantize(x, rng=jax.random.PRNGKey(0))
+    back = int8_dequantize(q, s)
+    assert float(back.mean()) == pytest.approx(0.3, rel=0.02)
+
+
+def test_compress_roundtrip_tree():
+    tree = {"a": jnp.asarray([1.0, -2.0, 3.0]), "b": {"c": jnp.ones((4, 4))}}
+    comp = compress_gradients(tree)
+    back = decompress_gradients(comp, tree)
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+    np.testing.assert_allclose(np.asarray(back["b"]["c"]), 1.0, atol=1e-2)
+
+
+def test_grad_accumulation_matches_single_step():
+    cfg = reduced(get_config("olmo-1b"), n_layers=1, vocab=128)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=0.0)    # lr 0: isolate the gradient computation
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 16), 0, cfg.vocab),
+    }
+    s1 = make_train_step(model, opt, microbatches=1)
+    s2 = make_train_step(model, opt, microbatches=2)
+    _, _, m1 = jax.jit(s1)(params, opt.init(params), batch)
+    _, _, m2 = jax.jit(s2)(params, opt.init(params), batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-4)
+    assert float(m1["grad_norm"]) == pytest.approx(float(m2["grad_norm"]), rel=1e-3)
+
+
+def test_train_step_learns():
+    cfg = reduced(get_config("qwen1.5-0.5b"), n_layers=2, vocab=256)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=5e-3)
+    state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt), donate_argnums=(0, 1))
+    from repro.data.synthetic import SyntheticLM
+    it = iter(SyntheticLM(cfg.vocab, 8, 32, seed=0))
+    losses = []
+    for _ in range(30):
+        params, state, m = step(params, state, next(it))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
