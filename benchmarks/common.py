@@ -19,7 +19,7 @@ SCENARIOS = ("ced", "ped", "mix")
 
 
 def sim_config(**kw):
-    from repro.sim import SimConfig
+    from repro.api import SimConfig
 
     base = dict(
         n_cycles=20 if FULL else 8,
@@ -41,17 +41,20 @@ class Ctx:
     @property
     def profile(self):
         if self._profile is None:
-            from repro.sim import make_profile
+            from repro.api import make_profile
 
             self._profile = make_profile(seed=0)
         return self._profile
 
     def grid(self) -> Dict:
-        """(scheme, scenario) -> SimResult, computed once."""
+        """(scheme, scenario) -> SimResult, computed once.
+
+        Runs through the unified ``repro.api`` façade (registry policies +
+        online Orchestrator), like every other consumer."""
         if self._grid is None:
             from dataclasses import replace
 
-            from repro.sim import run_one
+            from repro.api import run_one
 
             out = {}
             for scen in SCENARIOS:

@@ -1,6 +1,8 @@
-"""The paper's own experiment, miniaturised: orchestrate 4 DAG applications
-over 100 heterogeneous edge devices with all 6 schemes and print the Fig.8 /
-Fig.9 metrics (service time, probability of failure).
+"""The paper's own experiment, miniaturised, driven entirely through the
+``repro.api`` façade: orchestrate 4 DAG applications over 100 heterogeneous
+edge devices with all 6 registry policies and print the Fig.8 / Fig.9
+metrics (service time, probability of failure), then demo the pure
+plan/apply/undo protocol with a speculative alpha what-if sweep.
 
     PYTHONPATH=src python examples/edge_orchestration_demo.py [--full]
 
@@ -15,15 +17,20 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.sim import SimConfig, make_profile, run_one
+from repro.api import (
+    Orchestrator,
+    SimConfig,
+    make_cluster,
+    make_policy,
+    make_profile,
+    orchestrate,
+    run_one,
+)
+from repro.sim.apps import lightgbm_app
+from repro.sim.runner import SCHEME_NAMES
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--scenario", default="ped", choices=("ped", "ced", "mix"))
-    args = ap.parse_args()
-
+def paper_grid(args):
     cfg = SimConfig(
         scenario=args.scenario,
         n_cycles=20 if args.full else 4,
@@ -34,7 +41,8 @@ def main():
           f"instances/cycle={cfg.instances_per_cycle}")
     print(f"{'scheme':14s} {'service(s)':>10s} {'P_f':>7s} {'replicas':>9s}")
     rows = {}
-    for scheme in ("ibdash", "lats", "lavea", "petrel", "round_robin", "random"):
+    for scheme in SCHEME_NAMES:
+        # run_one = Orchestrator(cluster, policy).submit_batch(...).step(...)
         res = run_one(scheme, cfg, profile)
         nrep = float(np.mean([r.n_replicas for r in res.instances]))
         rows[scheme] = res
@@ -46,6 +54,54 @@ def main():
     print(f"\nIBDASH vs best baseline:  service time "
           f"{100*(1 - ib.avg_service_time/base_lat):+.1f}%,  P_f "
           f"{100*(1 - ib.prob_failure/max(base_pf, 1e-9)):+.1f}%")
+    return cfg, profile
+
+
+def what_if_sweep(cfg, profile):
+    """Two-phase protocol: plan speculatively, inspect, roll back — the
+    cluster is bit-identical afterwards, so the sweep is free."""
+    print("\nspeculative alpha sweep (plan/apply/undo, no state corruption):")
+    cluster = make_cluster(profile, scenario="ped", n_devices=40, seed=0)
+    app = lightgbm_app().relabel("#whatif")
+    alloc_before = cluster.alloc.copy()
+    for alpha in (0.0, 0.25, 0.5, 0.75, 1.0):
+        plan = orchestrate(app, cluster, 0.0,
+                           make_policy("ibdash", alpha=alpha, beta=1e-5))
+        token = cluster.apply(plan)          # make it real...
+        print(f"  alpha={alpha:4.2f}  est_latency={plan.est_latency:6.3f}s  "
+              f"pred_fail={plan.placement.pred_app_fail:.4f}  "
+              f"extra_replicas={plan.placement.n_replicas()}")
+        cluster.undo(token)                  # ...then roll it back exactly
+    assert (cluster.alloc == alloc_before).all()
+    print("  cluster state untouched after sweep: True")
+
+
+def online_demo(profile):
+    """The Orchestrator façade in online mode: submit, step, drain."""
+    print("\nonline orchestration (submit/step/drain):")
+    cluster = make_cluster(profile, scenario="mix", n_devices=24, seed=3)
+    orch = Orchestrator(cluster, "ibdash", seed=3)
+    rng = np.random.default_rng(0)
+    apps = [lightgbm_app().relabel(f"#{i}") for i in range(50)]
+    orch.submit_batch(apps, sorted(rng.uniform(0.0, 1.5, 50).tolist()))
+    orch.step(until=1.0)
+    print(f"  t=1.0s: {len(orch.records)} arrivals placed, "
+          f"{orch.pending_events} events in flight")
+    orch.drain()
+    res = orch.result("mix")
+    print(f"  drained at t={orch.now:.2f}s: {res.n} instances, "
+          f"avg service {res.avg_service_time:.3f}s, P_f {res.prob_failure:.3f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--scenario", default="ped", choices=("ped", "ced", "mix"))
+    args = ap.parse_args()
+
+    cfg, profile = paper_grid(args)
+    what_if_sweep(cfg, profile)
+    online_demo(profile)
 
 
 if __name__ == "__main__":

@@ -1,4 +1,9 @@
-"""Quickstart: train a tiny LM end to end, checkpoint it, reload it, serve it.
+"""Quickstart: the whole stack in three bites.
+
+  1. Place a DAG application with the pure policy API (`repro.api`):
+     plan -> inspect -> apply (undoable) -> run online via Orchestrator.
+  2. Train a tiny LM end to end, checkpoint it, reload it.
+  3. Serve the trained weights with batched requests.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,22 +12,48 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
 import numpy as np
 
-from repro.launch.train import train
-from repro.models import LM
-from repro.serve.engine import ServingEngine
+
+def orchestration_quickstart():
+    from repro.api import Orchestrator, make_cluster, make_profile, make_policy, orchestrate
+    from repro.sim.apps import video_app
+
+    profile = make_profile(seed=0)
+    cluster = make_cluster(profile, scenario="mix", n_devices=16, seed=0)
+    app = video_app().relabel("#demo")
+
+    # two-phase: pure plan, explicit (undoable) apply
+    policy = make_policy("ibdash", alpha=0.5, beta=0.1, gamma=3)
+    plan = orchestrate(app, cluster, now=0.0, policy=policy)
+    print(f"planned {len(plan.tasks)} tasks, est latency {plan.est_latency:.3f}s, "
+          f"pred P_f {plan.placement.pred_app_fail:.4f}")
+    token = cluster.apply(plan)      # T_alloc intervals + model uploads recorded
+    cluster.undo(token)              # ...and rolled back exactly (what-if mode)
+
+    # online: the Orchestrator façade drives the same policy event by event
+    orch = Orchestrator(cluster, policy, seed=0)
+    rng = np.random.default_rng(1)
+    apps = [video_app().relabel(f"#{i}") for i in range(20)]
+    orch.submit_batch(apps, sorted(rng.uniform(0.0, 1.0, 20).tolist()))
+    orch.drain()
+    res = orch.result("mix")
+    print(f"orchestrated {res.n} instances online: "
+          f"avg service {res.avg_service_time:.3f}s, P_f {res.prob_failure:.3f}")
 
 
-def main():
-    # 1) train a reduced Qwen-family model on the synthetic stream
+def training_and_serving_quickstart():
+    from repro.launch.train import train
+    from repro.models import LM
+    from repro.serve.engine import ServingEngine
+
+    # train a reduced Qwen-family model on the synthetic stream
     out = train("qwen1.5-0.5b", use_reduced=True, steps=30, batch=8, seq=64,
                 lr=5e-3, ckpt_dirs=("/tmp/quickstart_ckpt/a", "/tmp/quickstart_ckpt/b"))
     print(f"loss: {out['first_loss']:.3f} -> {out['final_loss']:.3f}")
     assert out["final_loss"] < out["first_loss"], "training must reduce loss"
 
-    # 2) serve the trained weights with batched requests
+    # serve the trained weights with batched requests
     model = LM(out["config"])
     eng = ServingEngine(model, out["params"], max_batch=4, max_seq=128)
     rng = np.random.default_rng(0)
@@ -33,6 +64,11 @@ def main():
         done.update(eng.step())
     for rid in sorted(done):
         print(f"  {rid}: generated {len(done[rid])} tokens: {done[rid][:8]}...")
+
+
+def main():
+    orchestration_quickstart()
+    training_and_serving_quickstart()
     print("quickstart OK")
 
 

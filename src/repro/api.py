@@ -1,0 +1,190 @@
+"""repro.api — the one front door for DAG orchestration.
+
+Everything the paper's evaluation, the benchmarks, and the serving fleet do
+is a composition of three primitives:
+
+  * ``plan = orchestrate(app, cluster, now, policy)`` — pure planning: the
+    policy (a registered name or a :class:`~repro.core.policy.Policy`) maps
+    array-native :class:`~repro.core.policy.PolicyContext` snapshots to
+    device decisions; nothing is mutated.
+  * ``token = cluster.apply(plan)`` / ``cluster.undo(token)`` — the single
+    explicit mutation path (T_alloc intervals + model-cache admission),
+    undoable for speculative what-if planning (alpha/gamma sweeps).
+  * :class:`Orchestrator` — the online façade: ``submit(app, t)`` arrivals,
+    ``step(until)`` the discrete-event clock forward, ``drain()`` to
+    quiescence.  ``sim.runner.run_one/run_grid/sweep_*`` and
+    ``serve.scheduler.ServingFleet`` are thin drivers over this class.
+
+Quick tour::
+
+    from repro.api import Orchestrator, make_policy, orchestrate
+
+    orch = Orchestrator(cluster, "ibdash", seed=0)
+    orch.submit_batch(apps, times)          # the 1000-instance burst
+    orch.step(until=15.0)                   # one paper cycle
+    res = orch.result("mix", horizon=15.0)
+
+    # speculative what-if: plan, inspect, roll back
+    plan = orch.plan(app, now=0.0)
+    token = orch.commit(plan)
+    orch.cluster.undo(token)
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Union
+
+from .core.cluster import ApplyToken, ClusterState, Device
+from .core.dag import AppDAG, TaskSpec
+from .core.interference import InterferenceModel
+from .core.orchestrator import (
+    IBDASHConfig,
+    Placement,
+    Plan,
+    Replica,
+    TaskPlacement,
+    orchestrate,
+)
+from .core.policy import (
+    Policy,
+    PolicyContext,
+    TaskDecision,
+    available_policies,
+    make_policy,
+    register_policy,
+)
+from .sim.engine import Engine, InstanceRecord, SimResult
+
+__all__ = [
+    "Orchestrator",
+    "orchestrate",
+    "Plan",
+    "Placement",
+    "TaskPlacement",
+    "Replica",
+    "Policy",
+    "PolicyContext",
+    "TaskDecision",
+    "register_policy",
+    "make_policy",
+    "available_policies",
+    "IBDASHConfig",
+    "ApplyToken",
+    "ClusterState",
+    "Device",
+    "InterferenceModel",
+    "AppDAG",
+    "TaskSpec",
+    "Engine",
+    "InstanceRecord",
+    "SimResult",
+    # lazily re-exported (see __getattr__): run_one, run_grid, sweep_alpha,
+    # sweep_gamma, SimConfig, make_profile, make_cluster, ServingFleet
+]
+
+
+class Orchestrator:
+    """Online orchestration façade over one cluster + one policy.
+
+    Owns the discrete-event engine: arrivals submitted with :meth:`submit`
+    are planned with the pure policy API the moment they occur, applied via
+    ``cluster.apply``, and executed against ground-truth interference/
+    failure dynamics as the clock advances through :meth:`step`.
+    """
+
+    def __init__(
+        self,
+        cluster: ClusterState,
+        policy: Union[str, Policy],
+        *,
+        seed: int = 0,
+        noise_sigma: float = 0.10,
+        **policy_kwargs,
+    ):
+        if isinstance(policy, str):
+            policy = make_policy(policy, seed=seed, **policy_kwargs)
+        self.cluster = cluster
+        self.policy = policy
+        self.engine = Engine(cluster, policy, seed=seed, noise_sigma=noise_sigma)
+
+    # -- online interface -------------------------------------------------------
+    def submit(self, app: AppDAG, t: float) -> "Orchestrator":
+        """Enqueue one application instance arriving at absolute time ``t``."""
+        self.engine.add_arrivals([app], [t])
+        return self
+
+    def submit_batch(
+        self, apps: Sequence[AppDAG], times: Sequence[float]
+    ) -> "Orchestrator":
+        """Enqueue a burst of simultaneous/clustered arrivals (the paper's
+        ~1000 instances inside 1.5 s).  Placement work shared across each
+        app's stage — the T_alloc snapshot and per-type Eq. (1) vectors —
+        is built once per stage by the context builder."""
+        if len(apps) != len(times):
+            raise ValueError("apps and times must have equal length")
+        self.engine.add_arrivals(list(apps), list(times))
+        return self
+
+    def step(self, until: float) -> "Orchestrator":
+        """Advance the event clock, processing every event with t <= until."""
+        self.engine.run(until=until)
+        return self
+
+    def drain(self) -> "Orchestrator":
+        """Run to quiescence: process every remaining event."""
+        self.engine.drain()
+        return self
+
+    # -- two-phase planning (speculative / what-if) -----------------------------
+    def plan(self, app: AppDAG, now: Optional[float] = None) -> Plan:
+        """Pure planning against the current state (no mutation)."""
+        return orchestrate(
+            app, self.cluster, self.now if now is None else now, self.policy
+        )
+
+    def commit(self, plan: Plan) -> ApplyToken:
+        """Apply a plan; the returned token undoes it via ``cluster.undo``."""
+        return self.cluster.apply(plan)
+
+    # -- results ----------------------------------------------------------------
+    def result(self, scenario: str = "online", horizon: Optional[float] = None) -> SimResult:
+        return self.engine.result(
+            scenario=scenario, horizon=self.now if horizon is None else horizon
+        )
+
+    @property
+    def now(self) -> float:
+        return self.engine.now
+
+    @property
+    def records(self) -> List[InstanceRecord]:
+        return self.engine.records
+
+    @property
+    def pending_events(self) -> int:
+        return len(self.engine.events)
+
+
+_LAZY = {
+    "run_one": ("repro.sim.runner", "run_one"),
+    "run_grid": ("repro.sim.runner", "run_grid"),
+    "sweep_alpha": ("repro.sim.runner", "sweep_alpha"),
+    "sweep_gamma": ("repro.sim.runner", "sweep_gamma"),
+    "SimConfig": ("repro.sim.runner", "SimConfig"),
+    "make_profile": ("repro.sim.profiles", "make_profile"),
+    "make_cluster": ("repro.sim.profiles", "make_cluster"),
+    "EdgeProfile": ("repro.sim.profiles", "EdgeProfile"),
+    "ServingFleet": ("repro.serve.scheduler", "ServingFleet"),
+}
+
+
+def __getattr__(name: str):
+    """Lazy re-exports of the grid runners and the serving fleet, so that
+    ``repro.api`` stays import-light and free of circular imports (the
+    runners themselves build :class:`Orchestrator` instances)."""
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod_name), attr)

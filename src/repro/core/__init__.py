@@ -1,9 +1,13 @@
 """IBDASH core: DAG staging, interference model, availability prediction,
-cluster state and the orchestration algorithm + baselines.
+cluster state, and the pure policy/orchestration API.
 
-This package is the paper's primary contribution, implemented exactly as in
-Algorithm 1 and reused verbatim by the distributed-training/serving runtime
-(:mod:`repro.ft`, :mod:`repro.serve`).
+This package is the paper's primary contribution.  Algorithm 1 and the five
+baselines are pure ``decide(ctx) -> TaskDecision`` policies in
+:mod:`repro.core.policy`; :func:`repro.core.orchestrator.orchestrate` builds
+the array-native :class:`PolicyContext` per task and assembles a
+:class:`Plan`; :meth:`repro.core.cluster.ClusterState.apply` is the single
+mutation path (with undo tokens).  The same code is reused verbatim by the
+distributed-training/serving runtime (:mod:`repro.ft`, :mod:`repro.serve`).
 """
 from .availability import (
     LAMBDA_CED,
@@ -17,10 +21,33 @@ from .availability import (
     young_daly_interval,
 )
 from .baselines import LAVEA, LaTS, LaTSModel, Petrel, RandomScheduler, RoundRobinScheduler
-from .cluster import ClusterState, Device
+from .cluster import ApplyToken, ClusterState, Device
 from .dag import AppDAG, TaskSpec, app_stage, topological_order, validate_dag
 from .interference import InterferenceModel, fit_linear_interference
-from .orchestrator import IBDASH, IBDASHConfig, Placement, Replica, Scheduler, TaskPlacement
+from .orchestrator import (
+    IBDASH,
+    IBDASHConfig,
+    Placement,
+    Plan,
+    Replica,
+    Scheduler,
+    TaskPlacement,
+    orchestrate,
+)
+from .policy import (
+    IBDASHPolicy,
+    LAVEAPolicy,
+    LaTSPolicy,
+    PetrelPolicy,
+    Policy,
+    PolicyContext,
+    RandomPolicy,
+    RoundRobinPolicy,
+    TaskDecision,
+    available_policies,
+    make_policy,
+    register_policy,
+)
 
 __all__ = [
     "AppDAG",
@@ -30,14 +57,29 @@ __all__ = [
     "validate_dag",
     "InterferenceModel",
     "fit_linear_interference",
+    "ApplyToken",
     "ClusterState",
     "Device",
     "IBDASH",
     "IBDASHConfig",
     "Placement",
+    "Plan",
     "Replica",
     "Scheduler",
     "TaskPlacement",
+    "orchestrate",
+    "Policy",
+    "PolicyContext",
+    "TaskDecision",
+    "register_policy",
+    "make_policy",
+    "available_policies",
+    "IBDASHPolicy",
+    "RandomPolicy",
+    "RoundRobinPolicy",
+    "LAVEAPolicy",
+    "PetrelPolicy",
+    "LaTSPolicy",
     "RandomScheduler",
     "RoundRobinScheduler",
     "LAVEA",

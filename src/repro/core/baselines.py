@@ -1,176 +1,79 @@
-"""Baseline orchestration schemes the paper compares against (§V-D).
+"""DEPRECATED shims for the baseline schemes the paper compares against (§V-D).
 
-  Random      — uniform random device per task.
-  RoundRobin  — cyclic assignment.
-  LAVEA       — Shortest Queue Length First (SQLF): fewest running tasks.
-  Petrel      — power-of-two-choices: sample 2 devices, take the one with the
-                lower expected service time.
-  LaTS        — latency-aware: picks the device with the minimum latency
-                predicted by a parametric log(latency) ~ CPU-usage model
-                (the paper fits this linear-in-log model in Fig. 5).
+The actual decision rules now live in :mod:`repro.core.policy` as pure
+``decide(ctx) -> TaskDecision`` functions registered under their scheme
+names ("random", "round_robin", "lavea", "petrel", "lats").  These classes
+survive for one PR so existing imports keep working; each simply wraps its
+policy in the pure :class:`~repro.core.orchestrator.Scheduler` shim.
 
 Every baseline runs in the *same* environment as IBDASH: model uploads and
 cross-device data transfers still cost time and T_alloc bookkeeping is kept
-identically — the baselines simply don't reason about those costs (or, for
-all of them, about failure probabilities / replication) when choosing
-devices.  Placement bookkeeping estimates use the ground-truth interference
-model so that the simulated environment is identical across schemes; only
-the *choice* differs.
+identically — the baselines simply don't reason about those costs (or about
+failure probabilities / replication) when choosing devices.  Placement
+bookkeeping estimates use the ground-truth interference model so that the
+simulated environment is identical across schemes; only the *choice*
+differs.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from .orchestrator import Scheduler
+from .policy import (
+    LAVEAPolicy,
+    LaTSModel,
+    LaTSPolicy,
+    PetrelPolicy,
+    RandomPolicy,
+    RoundRobinPolicy,
+)
 
-import numpy as np
-
-from .availability import prob_fail_during
-from .cluster import ClusterState
-from .dag import AppDAG
-from .orchestrator import Placement, Replica, Scheduler, TaskPlacement
-
-__all__ = ["RandomScheduler", "RoundRobinScheduler", "LAVEA", "Petrel", "LaTS"]
-
-
-class _SingleChoiceScheduler(Scheduler):
-    """Template: walk stages, pick one device per task via ``choose``."""
-
-    def __init__(self, seed: int = 0):
-        self.rng = np.random.default_rng(seed)
-
-    def choose(
-        self,
-        feasible: np.ndarray,
-        exec_lat: np.ndarray,
-        cluster: ClusterState,
-        t_start: float,
-        ttype: int,
-    ) -> int:
-        raise NotImplementedError
-
-    def place(self, app: AppDAG, cluster: ClusterState, now: float) -> Placement:
-        placements: Dict[str, TaskPlacement] = {}
-        bw = cluster.bandwidths()
-        lams = cluster.lams()
-        mem_total = cluster.mem_totals()
-        stage_offset = 0.0
-        for stage in app.stages:
-            stage_latency = 0.0
-            for tname in stage:
-                spec = app.tasks[tname]
-                t_start = now + stage_offset
-                need = spec.mem_bytes + spec.model_bytes
-                feasible = np.flatnonzero(mem_total >= need)
-                if feasible.size == 0:
-                    return Placement(
-                        app_name=app.name, tasks=placements, est_latency=0.0,
-                        feasible=False, infeasible_task=tname,
-                    )
-                exec_lat = cluster.estimate_exec(spec.ttype, t_start)
-                did = int(self.choose(feasible, exec_lat, cluster, t_start, spec.ttype))
-                dev = cluster.devices[did]
-                up = self.upload_latency(app, tname, dev, bw[did])
-                tr = self.transfer_latency(app, tname, did, placements, bw[did])
-                total = float(exec_lat[did]) + up + tr
-                window = (t_start - dev.join_time) + total
-                rep = Replica(
-                    did=did, est_exec=float(exec_lat[did]), est_upload=up,
-                    est_transfer=tr,
-                    pred_fail=prob_fail_during(lams[did], window),
-                )
-                tp = TaskPlacement(
-                    task=tname, ttype=spec.ttype, replicas=[rep],
-                    est_start=stage_offset, est_latency=total,
-                )
-                placements[tname] = tp
-                stage_latency = max(stage_latency, total)
-            stage_offset += stage_latency
-        return self.commit(app, cluster, now, placements)
+__all__ = [
+    "RandomScheduler",
+    "RoundRobinScheduler",
+    "LAVEA",
+    "Petrel",
+    "LaTS",
+    "LaTSModel",
+]
 
 
-class RandomScheduler(_SingleChoiceScheduler):
-    name = "random"
-
-    def choose(self, feasible, exec_lat, cluster, t_start, ttype) -> int:
-        return int(self.rng.choice(feasible))
-
-
-class RoundRobinScheduler(_SingleChoiceScheduler):
-    name = "round_robin"
+class RandomScheduler(Scheduler):
+    """DEPRECATED: use ``make_policy("random", seed=...)``."""
 
     def __init__(self, seed: int = 0):
-        super().__init__(seed)
-        self._next = 0
+        super().__init__(RandomPolicy(seed=seed))
 
-    def choose(self, feasible, exec_lat, cluster, t_start, ttype) -> int:
-        did = int(feasible[self._next % feasible.size])
-        self._next += 1
-        return did
+    @property
+    def rng(self):
+        return self.policy.rng
 
 
-class LAVEA(_SingleChoiceScheduler):
-    """Shortest Queue Length First (best scheme of LAVEA [6])."""
+class RoundRobinScheduler(Scheduler):
+    """DEPRECATED: use ``make_policy("round_robin")``."""
 
-    name = "lavea"
-
-    def choose(self, feasible, exec_lat, cluster, t_start, ttype) -> int:
-        q = cluster.queue_len_at(t_start)[feasible]
-        return int(feasible[int(np.argmin(q))])
+    def __init__(self, seed: int = 0):
+        super().__init__(RoundRobinPolicy(seed=seed))
 
 
-class Petrel(_SingleChoiceScheduler):
-    """Power-of-two-choices randomized load balancing [7], [8]."""
+class LAVEA(Scheduler):
+    """DEPRECATED: use ``make_policy("lavea")`` (SQLF, best scheme of [6])."""
 
-    name = "petrel"
-
-    def choose(self, feasible, exec_lat, cluster, t_start, ttype) -> int:
-        if feasible.size == 1:
-            return int(feasible[0])
-        a, b = self.rng.choice(feasible, size=2, replace=False)
-        return int(a if exec_lat[a] <= exec_lat[b] else b)
+    def __init__(self, seed: int = 0):
+        super().__init__(LAVEAPolicy(seed=seed))
 
 
-@dataclass
-class LaTSModel:
-    """Parametric latency model of LaTS [9]: log(latency) is linear in CPU
-    usage (paper Fig. 5):  lat(cls, type, usage) = base * exp(b * usage).
+class Petrel(Scheduler):
+    """DEPRECATED: use ``make_policy("petrel", seed=...)``."""
 
-    ``cpu_usage[cls, ttype]`` is the incremental CPU fraction one running
-    task of ``ttype`` consumes on a class-``cls`` device; the device's total
-    usage saturates at 1.0.
-    """
-
-    base: np.ndarray       # (P, N) unloaded latency per class/type
-    b: np.ndarray          # (P,) fitted log-linear slope per class
-    cpu_usage: np.ndarray  # (P, N)
-    usage_cap: float = 4.0  # >1: oversubscribed CPU still adds latency signal
-
-    def predict(self, classes: np.ndarray, ttype: int, counts: np.ndarray) -> np.ndarray:
-        usage = np.minimum(
-            (self.cpu_usage[classes] * counts).sum(axis=1), self.usage_cap
-        )
-        return self.base[classes, ttype] * np.exp(self.b[classes] * usage)
+    def __init__(self, seed: int = 0):
+        super().__init__(PetrelPolicy(seed=seed))
 
 
-class LaTS(_SingleChoiceScheduler):
-    """Latency-aware task scheduling via the latency–CPU-usage model.
-
-    LaTS predicts execution latency well but ignores data-transfer and
-    model-upload costs as well as failure probability — which is why (as in
-    the paper) it concentrates load on the single fastest device."""
-
-    name = "lats"
+class LaTS(Scheduler):
+    """DEPRECATED: use ``make_policy("lats", lats_model=..., seed=...)``."""
 
     def __init__(self, model: LaTSModel, seed: int = 0):
-        super().__init__(seed)
-        self.model = model
+        super().__init__(LaTSPolicy(lats_model=model, seed=seed))
 
-    def choose(self, feasible, exec_lat, cluster, t_start, ttype) -> int:
-        counts = np.asarray(cluster.counts_at(t_start), dtype=np.float64)[feasible]
-        pred = self.model.predict(cluster.classes()[feasible], ttype, counts)
-        # Devices of the same class at saturated CPU usage produce identical
-        # predictions; break ties randomly so LaTS spreads within its
-        # favourite class instead of degenerating onto device 0.
-        lo = pred.min()
-        ties = np.flatnonzero(pred <= lo * (1.0 + 1e-9))
-        return int(feasible[int(self.rng.choice(ties))])
+    @property
+    def model(self) -> LaTSModel:
+        return self.policy.model

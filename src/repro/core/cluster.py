@@ -27,7 +27,7 @@ import numpy as np
 
 from .interference import InterferenceModel
 
-__all__ = ["Device", "ClusterState"]
+__all__ = ["Device", "ClusterState", "ApplyToken"]
 
 
 @dataclass
@@ -80,6 +80,27 @@ class Device:
 
     def alive(self, now: float) -> bool:
         return now < self.alive_until
+
+
+@dataclass
+class ApplyToken:
+    """Undo record for one ``ClusterState.apply`` call.
+
+    Captures the occupancy intervals that were added and, for every device
+    whose model cache was touched, an exact snapshot of its prior
+    ``(mem_free, model_cache)`` — LRU order included — so speculative plans
+    and what-if sweeps can be rolled back bit-exactly with
+    ``cluster.undo(token)``.
+    """
+
+    intervals: List[Tuple[int, int, float, float, float]] = field(
+        default_factory=list
+    )  # (did, ttype, t0, t1, w)
+    cache_snaps: Dict[int, Tuple[float, "OrderedDict[str, float]"]] = field(
+        default_factory=dict
+    )
+    applied: bool = False       # False for infeasible / rejected plans
+    undone: bool = False
 
 
 @dataclass
@@ -149,7 +170,10 @@ class ClusterState:
         return np.maximum(self.alloc[:, :, self.bucket(t)], 0.0)
 
     def device_counts_at(self, did: int, t: float) -> np.ndarray:
-        return self.alloc[did, :, self.bucket(t)]
+        """One device's Task_info row at time t, clipped at zero like
+        ``counts_at`` (provisional-interval subtraction can leave small
+        negative residue that must not shrink interference estimates)."""
+        return np.maximum(self.alloc[did, :, self.bucket(t)], 0.0)
 
     # -- Eq. (1) across the fleet ---------------------------------------------
     def estimate_exec(self, ttype: int, t: float) -> np.ndarray:
@@ -162,3 +186,65 @@ class ClusterState:
     def queue_len_at(self, t: float) -> np.ndarray:
         """(D,) total running tasks per device (LAVEA's SQLF signal)."""
         return np.asarray(self.counts_at(t), dtype=np.float64).sum(axis=1)
+
+    # -- the one blessed mutation path ----------------------------------------
+    def apply(self, plan) -> ApplyToken:
+        """Make a :class:`~repro.core.orchestrator.Plan` real.
+
+        Records the provisional T_alloc occupancy interval of every replica
+        and admits required model artifacts into the per-device LRU caches
+        (Algorithm 1 lines 19-27) — exactly the bookkeeping the seed's
+        ``Scheduler.commit`` performed, but as an explicit, undoable step.
+
+        Returns an :class:`ApplyToken`; pass it to :meth:`undo` to roll the
+        state back exactly (speculative planning, alpha/gamma what-if
+        sweeps).  Infeasible plans are a no-op.
+
+        If a required model cannot fit on its chosen device even after LRU
+        eviction, the whole application is rolled back and the plan is
+        marked infeasible at that task (mirroring the memory-constraint
+        branch of the planning phase) instead of silently treating the
+        model as cached.
+        """
+        token = ApplyToken()
+        placement = plan.placement
+        if not placement.feasible:
+            return token
+        app, now = plan.app, plan.now
+        for tname, tp in placement.tasks.items():
+            spec = app.tasks[tname]
+            start = now + tp.est_start
+            for rep in tp.replicas:
+                self.add_interval(
+                    rep.did, spec.ttype, start, start + rep.est_total
+                )
+                token.intervals.append(
+                    (rep.did, spec.ttype, start, start + rep.est_total, 1.0)
+                )
+                dev = self.devices[rep.did]
+                if spec.model_id is not None:
+                    if rep.did not in token.cache_snaps:
+                        token.cache_snaps[rep.did] = (
+                            dev.mem_free, OrderedDict(dev.model_cache)
+                        )
+                    if not dev.admit_model(spec.model_id, spec.model_bytes):
+                        # the model cannot fit even after evicting the whole
+                        # cache: surface it instead of pretending it loaded
+                        self.undo(token)
+                        placement.feasible = False
+                        placement.infeasible_task = tname
+                        return ApplyToken()
+        token.applied = True
+        return token
+
+    def undo(self, token: ApplyToken) -> None:
+        """Roll back one :meth:`apply` exactly (idempotent per token)."""
+        if token.undone:
+            return
+        for did, ttype, t0, t1, w in reversed(token.intervals):
+            self.add_interval(did, ttype, t0, t1, w=-w)
+        for did, (mem_free, cache) in token.cache_snaps.items():
+            dev = self.devices[did]
+            dev.mem_free = mem_free
+            dev.model_cache = OrderedDict(cache)
+        token.undone = True

@@ -1,19 +1,35 @@
-"""IBDASH orchestration — faithful implementation of Algorithm 1.
+"""Orchestration driver — faithful implementation of Algorithm 1, split into
+a pure planning phase and an explicit state-mutation phase.
 
 Given an application DAG, the current cluster state (T_alloc / ED_info /
-M_info) and the profiled interference table ED_mc, produce a placement
-``P(T_i)`` for every task that greedily minimises
+M_info) and the profiled interference table ED_mc, :func:`orchestrate`
+produces a placement ``P(T_i)`` for every task that minimises
 
     L(T_i) = L(T_i)_{ED_p} + L(M(T_i))_{ED_p} + L(T_i)_d          (Eq. 2)
 
-subject to bandwidth and memory constraints, then reduces the predicted
-probability of failure by replicating tasks whose ``F(T_i)`` exceeds the
-threshold ``beta`` onto the next-best devices, for as long as the weighted
+subject to bandwidth and memory constraints, and (for the IBDASH policy)
+reduces the predicted probability of failure by replicating tasks whose
+``F(T_i)`` exceeds the threshold ``beta``, for as long as the weighted
 joint score
 
     WeightS = alpha * L~(T_i) + (1 - alpha) * F(T_i)              (line 29)
 
 keeps improving and the replication degree stays below ``gamma``.
+
+API shape (the redesign)
+------------------------
+* ``plan = orchestrate(app, cluster, now, policy)`` is PURE: it reads
+  cluster state, builds one :class:`~repro.core.policy.PolicyContext` per
+  task (sharing the expensive T_alloc snapshot + Eq. 1 evaluation across a
+  stage's tasks), asks the policy to ``decide``, and assembles a
+  :class:`Plan`.  Nothing is written back.
+* ``token = cluster.apply(plan)`` records the provisional T_alloc occupancy
+  intervals and admits model uploads into the per-device LRU caches —
+  exactly the bookkeeping the paper's orchestrator performs — and returns
+  an undo token so speculative planning and what-if sweeps can
+  ``cluster.undo(token)`` without corrupting state.
+* The legacy ``Scheduler.place`` entry point survives as a deprecated,
+  now *pure* shim over ``orchestrate`` (it no longer mutates anything).
 
 Notes on fidelity
 -----------------
@@ -36,11 +52,27 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .availability import prob_fail_during
 from .cluster import ClusterState
 from .dag import AppDAG
+from .policy import (
+    IBDASHConfig,
+    IBDASHPolicy,
+    Policy,
+    PolicyContext,
+    TaskDecision,
+    make_policy,
+)
 
-__all__ = ["Replica", "TaskPlacement", "Placement", "Scheduler", "IBDASH"]
+__all__ = [
+    "Replica",
+    "TaskPlacement",
+    "Placement",
+    "Plan",
+    "orchestrate",
+    "Scheduler",
+    "IBDASH",
+    "IBDASHConfig",
+]
 
 
 @dataclass
@@ -98,19 +130,230 @@ class Placement:
         return sum(len(tp.replicas) - 1 for tp in self.tasks.values())
 
 
+@dataclass
+class Plan:
+    """A pure placement proposal: everything ``ClusterState.apply`` needs to
+    record the bookkeeping, and everything callers need to inspect it first.
+
+    ``plan.placement`` is the paper-shaped result; ``plan.app`` / ``plan.now``
+    carry the context ``apply`` requires (task specs for model ids and
+    interval endpoints)."""
+
+    app: AppDAG
+    now: float
+    placement: Placement
+
+    # convenience pass-throughs -------------------------------------------------
+    @property
+    def feasible(self) -> bool:
+        return self.placement.feasible
+
+    @property
+    def est_latency(self) -> float:
+        return self.placement.est_latency
+
+    @property
+    def tasks(self) -> Dict[str, TaskPlacement]:
+        return self.placement.tasks
+
+
+def build_contexts(
+    app: AppDAG, cluster: ClusterState, now: float
+) -> "_ContextBuilder":
+    """Incremental :class:`PolicyContext` factory for one application.
+
+    Exposed for tooling (what-if scoring, future jit/vmap batching); the
+    main consumer is :func:`orchestrate`."""
+    return _ContextBuilder(app, cluster, now)
+
+
+class _ContextBuilder:
+    """Builds per-task PolicyContexts, amortising fleet-wide array work.
+
+    The per-stage pieces — the T_alloc snapshot at the stage's start time,
+    the queue-length vector, and the Eq. (1) execution-latency vector per
+    task *type* — are computed once and shared by every task in the stage
+    (the paper's burst of ~1000 simultaneous instances makes this the hot
+    path).  Per-task pieces (upload/transfer vectors, feasibility, pf)
+    depend on the task's model/deps and stay per-task.
+    """
+
+    def __init__(self, app: AppDAG, cluster: ClusterState, now: float):
+        self.app = app
+        self.cluster = cluster
+        self.now = now
+        self.bw = cluster.bandwidths()
+        self.lams = cluster.lams()
+        self.mem_total = cluster.mem_totals()
+        self.classes = cluster.classes()
+        self.join = np.array([d.join_time for d in cluster.devices])
+        self.n_dev = cluster.n_devices
+        # per-stage cache
+        self._stage_t: Optional[float] = None
+        self._counts: Optional[np.ndarray] = None
+        self._queue_len: Optional[np.ndarray] = None
+        self._exec_by_type: Dict[int, np.ndarray] = {}
+
+    def begin_stage(self, stage_offset: float) -> None:
+        """Refresh the shared snapshot for a stage starting at this offset."""
+        t_start = self.now + stage_offset
+        if self._stage_t == t_start and self._counts is not None:
+            return
+        self._stage_t = t_start
+        self._counts = np.asarray(self.cluster.counts_at(t_start), dtype=np.float64)
+        self._queue_len = self._counts.sum(axis=1)
+        self._exec_by_type = {}
+
+    def _exec_lat(self, ttype: int) -> np.ndarray:
+        lat = self._exec_by_type.get(ttype)
+        if lat is None:
+            lat = self.cluster.model.estimate_devices(
+                self.classes, ttype, self._counts
+            )
+            self._exec_by_type[ttype] = lat
+        return lat
+
+    def context(
+        self,
+        tname: str,
+        stage_offset: float,
+        chosen: Dict[str, TaskPlacement],
+    ) -> PolicyContext:
+        """The full array-native view for one task (Eq. 1/2 inputs + F(T_i))."""
+        spec = self.app.tasks[tname]
+        t_start = self._stage_t
+        exec_lat = self._exec_lat(spec.ttype)
+
+        # lines 7-10: model upload latency where M(T_i) is missing.
+        up = np.zeros(self.n_dev)
+        if spec.model_id is not None:
+            for did in range(self.n_dev):
+                if not self.cluster.devices[did].has_model(spec.model_id):
+                    up[did] = spec.model_bytes / self.bw[did]
+        # lines 11-14: input data transfer from parents' devices.
+        tr = np.zeros(self.n_dev)
+        for dep in spec.deps:
+            parent = chosen.get(dep)
+            if parent is None or not parent.replicas:
+                continue
+            pdid = parent.replicas[0].did
+            add = self.app.tasks[dep].out_bytes / self.bw
+            add[pdid] = 0.0
+            tr += add
+        total = exec_lat + up + tr                      # line 15
+
+        # memory constraint H(T_i) <= H(ED_p) after LRU eviction of cached
+        # models (lines 20-23 make cache space reclaimable, so the binding
+        # constraint is total memory).
+        feasible = self.mem_total >= (spec.mem_bytes + spec.model_bytes)
+
+        # F(T_i): device must survive from allocation until the task's
+        # estimated completion (it departs silently, so the orchestrator
+        # cannot condition on liveness at start).
+        window = (t_start - self.join) + total
+        pf = 1.0 - np.exp(-self.lams * window)
+
+        return PolicyContext(
+            task=tname,
+            ttype=spec.ttype,
+            t_start=t_start,
+            stage_offset=stage_offset,
+            exec_lat=exec_lat,
+            upload=up,
+            transfer=tr,
+            total=total,
+            feasible=feasible,
+            feasible_ids=np.flatnonzero(feasible),
+            pf=pf,
+            lams=self.lams,
+            join_times=self.join,
+            queue_len=self._queue_len,
+            counts=self._counts,
+            classes=self.classes,
+        )
+
+
+def orchestrate(
+    app: AppDAG, cluster: ClusterState, now: float, policy: Policy
+) -> Plan:
+    """Pure planning: walk the staged DAG (Algorithm 1 lines 3-4), build one
+    context per task, let ``policy.decide`` pick devices, and assemble the
+    Plan.  Cluster state is only read — call ``cluster.apply(plan)`` to make
+    the placement real (or discard the plan for free).
+    """
+    if isinstance(policy, str):
+        policy = make_policy(policy)
+    ctxs = _ContextBuilder(app, cluster, now)
+    placements: Dict[str, TaskPlacement] = {}
+    stage_offset = 0.0
+
+    def infeasible(tname: str) -> Plan:
+        return Plan(app=app, now=now, placement=Placement(
+            app_name=app.name, tasks=placements, est_latency=0.0,
+            feasible=False, infeasible_task=tname,
+        ))
+
+    for stage in app.stages:                            # line 3
+        ctxs.begin_stage(stage_offset)
+        stage_latency = 0.0
+        for tname in stage:                             # line 4
+            ctx = ctxs.context(tname, stage_offset, placements)
+            if ctx.feasible_ids.size == 0:
+                return infeasible(tname)
+            decision = policy.decide(ctx)
+            if not decision.devices:                    # e.g. avail_floor
+                return infeasible(tname)
+            replicas = [
+                Replica(
+                    did=int(did),
+                    est_exec=float(ctx.exec_lat[did]),
+                    est_upload=float(ctx.upload[did]),
+                    est_transfer=float(ctx.transfer[did]),
+                    pred_fail=float(ctx.pf[did]),
+                )
+                for did in decision.devices
+            ]
+            tp = TaskPlacement(
+                task=tname,
+                ttype=ctx.ttype,
+                replicas=replicas,
+                est_start=stage_offset,
+                est_latency=replicas[0].est_total,
+            )
+            placements[tname] = tp                      # line 42
+            stage_latency = max(stage_latency, tp.est_latency)  # line 44
+        stage_offset += stage_latency
+
+    # L(G) = sum of stage maxima (Eq. 3) == the final stage offset.
+    return Plan(app=app, now=now, placement=Placement(
+        app_name=app.name, tasks=placements, est_latency=stage_offset,
+    ))
+
+
+# -- deprecated one-PR compatibility shims -------------------------------------
 class Scheduler:
-    """Interface shared by IBDASH and every baseline.
+    """DEPRECATED shim over the pure policy API (kept for one PR).
 
-    ``place`` may mutate cluster state: it records provisional occupancy
-    intervals in T_alloc (exactly the paper's bookkeeping) and admits model
-    uploads into the per-device LRU caches."""
+    ``place`` is now PURE: it plans via :func:`orchestrate` and returns the
+    Placement without touching cluster state.  Mutation happens only through
+    ``cluster.apply(plan)`` — use :class:`repro.api.Orchestrator` or the
+    two-phase protocol directly in new code.
+    """
 
-    name: str = "base"
+    def __init__(self, policy: Policy):
+        self.policy = policy
+
+    @property
+    def name(self) -> str:
+        return self.policy.name
+
+    def plan(self, app: AppDAG, cluster: ClusterState, now: float) -> Plan:
+        return orchestrate(app, cluster, now, self.policy)
 
     def place(self, app: AppDAG, cluster: ClusterState, now: float) -> Placement:
-        raise NotImplementedError
+        return self.plan(app, cluster, now).placement
 
-    # -- shared helpers ---------------------------------------------------------
+    # -- legacy helpers (unchanged semantics, still pure) -----------------------
     @staticmethod
     def transfer_latency(
         app: AppDAG, task: str, did: int, chosen: Dict[str, TaskPlacement],
@@ -143,153 +386,31 @@ class Scheduler:
         now: float,
         placements: Dict[str, TaskPlacement],
     ) -> Placement:
-        """Record occupancy intervals + model-cache effects for a finished
-        placement and assemble the Placement result."""
+        """DEPRECATED: assemble a Placement and apply it via the one blessed
+        mutation path, ``cluster.apply(plan)``."""
         est_latency = 0.0
-        stage_offsets: Dict[int, float] = {}
-        offset = 0.0
-        for si, stage in enumerate(app.stages):
-            stage_offsets[si] = offset
+        for stage in app.stages:
             stage_lat = 0.0
             for tname in stage:
                 tp = placements.get(tname)
-                if tp is None:
-                    continue
-                stage_lat = max(stage_lat, tp.est_latency)
-            offset += stage_lat
-        est_latency = offset
-        for tname, tp in placements.items():
-            spec = app.tasks[tname]
-            start = now + tp.est_start
-            for rep in tp.replicas:
-                cluster.add_interval(
-                    rep.did, spec.ttype, start, start + rep.est_total
-                )
-                dev = cluster.devices[rep.did]
-                if spec.model_id is not None:
-                    dev.admit_model(spec.model_id, spec.model_bytes)
-        return Placement(app_name=app.name, tasks=placements, est_latency=est_latency)
-
-
-@dataclass
-class IBDASHConfig:
-    alpha: float = 0.5     # joint optimisation weight (Eq. 5)
-    beta: float = 0.1      # probability-of-failure threshold
-    gamma: int = 3         # replication degree cap
-    # When True the orchestrator drops devices whose *predicted* availability
-    # is below ``avail_floor`` from the candidate set entirely (a beyond-paper
-    # guard; disabled by default to stay faithful).
-    avail_floor: float = 0.0
+                if tp is not None:
+                    stage_lat = max(stage_lat, tp.est_latency)
+            est_latency += stage_lat
+        placement = Placement(
+            app_name=app.name, tasks=placements, est_latency=est_latency
+        )
+        cluster.apply(Plan(app=app, now=now, placement=placement))
+        return placement
 
 
 class IBDASH(Scheduler):
-    """Algorithm 1."""
-
-    name = "ibdash"
+    """DEPRECATED shim: Algorithm 1 now lives in
+    :class:`repro.core.policy.IBDASHPolicy`; construct via
+    ``make_policy("ibdash", alpha=..., beta=..., gamma=...)``."""
 
     def __init__(self, config: Optional[IBDASHConfig] = None):
-        self.cfg = config or IBDASHConfig()
+        super().__init__(IBDASHPolicy(config))
 
-    def place(self, app: AppDAG, cluster: ClusterState, now: float) -> Placement:
-        cfg = self.cfg
-        placements: Dict[str, TaskPlacement] = {}
-        bw = cluster.bandwidths()
-        lams = cluster.lams()
-        stage_offset = 0.0
-
-        mem_total = cluster.mem_totals()
-        join = np.array([d.join_time for d in cluster.devices])
-        n_dev = cluster.n_devices
-
-        for si, stage in enumerate(app.stages):                 # line 3
-            stage_latency = 0.0
-            for tname in stage:                                 # line 4
-                spec = app.tasks[tname]
-                t_start = now + stage_offset
-                # Eq. (1) for every device at the task's estimated start
-                # (lines 5-6, vectorised over the fleet).
-                exec_lat = cluster.estimate_exec(spec.ttype, t_start)
-
-                # lines 7-10: model upload latency where M(T_i) is missing.
-                up = np.zeros(n_dev)
-                if spec.model_id is not None:
-                    for did in range(n_dev):
-                        if not cluster.devices[did].has_model(spec.model_id):
-                            up[did] = spec.model_bytes / bw[did]
-                # lines 11-14: input data transfer from parents' devices.
-                tr = np.zeros(n_dev)
-                for dep in spec.deps:
-                    parent = placements.get(dep)
-                    if parent is None or not parent.replicas:
-                        continue
-                    pdid = parent.replicas[0].did
-                    add = app.tasks[dep].out_bytes / bw
-                    add[pdid] = 0.0
-                    tr += add
-                total = exec_lat + up + tr                      # line 15
-
-                # memory constraint H(T_i) <= H(ED_p) after LRU eviction of
-                # cached models (lines 20-23 make cache space reclaimable, so
-                # the binding constraint is total memory).
-                feasible = mem_total >= (spec.mem_bytes + spec.model_bytes)
-                if cfg.avail_floor > 0.0:
-                    feasible &= np.exp(-lams * (t_start - join)) >= cfg.avail_floor
-                if not feasible.any():
-                    return Placement(
-                        app_name=app.name, tasks=placements, est_latency=0.0,
-                        feasible=False, infeasible_task=tname,
-                    )
-
-                # F(T_i): device must survive from allocation until the
-                # task's estimated completion (it departs silently, so the
-                # orchestrator cannot condition on liveness at start).
-                window = (t_start - join) + total
-                pf = 1.0 - np.exp(-lams * window)
-
-                # line 16-18: priority queue == ascending order over L(T_i).
-                cand = np.flatnonzero(feasible)
-                order = cand[np.argsort(total[cand], kind="stable")]
-
-                def mk(did: int) -> Replica:
-                    return Replica(
-                        did=int(did), est_exec=float(exec_lat[did]),
-                        est_upload=float(up[did]), est_transfer=float(tr[did]),
-                        pred_fail=float(pf[did]),
-                    )
-
-                best = mk(order[0])                             # line 18
-                best_total = float(total[order[0]])
-                l_ref = max(best_total, 1e-9)
-                replicas = [best]
-                comb_fail = best.pred_fail
-                # line 29: weighted joint score, latency normalised by the
-                # best candidate so alpha sweeps [0,1] meaningfully.
-                weight_s = cfg.alpha * (best_total / l_ref) + (1 - cfg.alpha) * comb_fail
-
-                t_rep = 0
-                qi = 1
-                while comb_fail >= cfg.beta and t_rep < cfg.gamma and qi < order.size:  # line 30
-                    did = order[qi]                             # line 31
-                    qi += 1
-                    cand_total = float(total[did])
-                    new_fail = comb_fail * float(pf[did])
-                    weight_new = cfg.alpha * (cand_total / l_ref) + (1 - cfg.alpha) * new_fail
-                    if weight_new <= weight_s:                  # line 34
-                        replicas.append(mk(did))                # line 35
-                        comb_fail = new_fail
-                        weight_s = weight_new
-                        t_rep += 1                              # line 37
-                    else:
-                        break                                   # line 39
-
-                tp = TaskPlacement(
-                    task=tname,
-                    ttype=spec.ttype,
-                    replicas=replicas,
-                    est_start=stage_offset,
-                    est_latency=replicas[0].est_total,
-                )
-                placements[tname] = tp                          # line 42
-                stage_latency = max(stage_latency, tp.est_latency)  # line 44
-            stage_offset += stage_latency
-        return self.commit(app, cluster, now, placements)       # line 46/48
+    @property
+    def cfg(self) -> IBDASHConfig:
+        return self.policy.cfg

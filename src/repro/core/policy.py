@@ -1,0 +1,342 @@
+"""Pure, array-native placement policies (the redesigned orchestration API).
+
+The paper's Algorithm 1 is, at heart, a *scoring rule*: blend the latency
+estimate of Eq. (2) with the failure probability of Eq. (4) using the
+weight of Eq. (5) and pick devices.  The seed buried that rule inside
+``Scheduler.place``, which also mutated cluster state — so policies could
+not be composed, batched, or replayed.  This module splits the two concerns:
+
+  * :class:`PolicyContext` — a frozen, array-shaped snapshot of everything a
+    policy may look at for ONE task: the per-device execution-latency vector
+    (Eq. 1 across the fleet), upload/transfer cost vectors, the feasibility
+    mask, per-device failure probabilities, queue lengths and running-task
+    counts.  It is precomputed once per task (and the expensive pieces once
+    per *stage*) by :func:`repro.core.orchestrator.orchestrate`.
+  * :class:`TaskDecision` — the policy's entire output: an ordered tuple of
+    device ids (primary first; extras are replicas).
+  * ``decide(ctx) -> TaskDecision`` — a pure function of the context (plus,
+    for the randomized baselines, the policy's own rng stream).  IBDASH and
+    all five baselines are each ~10-30 lines.
+
+Policies are registered by name with :func:`register_policy` and built with
+:func:`make_policy`, replacing the if-chains that previously lived in
+``sim.runner.make_scheduler`` and ``serve.scheduler.ServingFleet``.  Every
+factory accepts the full keyword bundle (``alpha``, ``beta``, ``gamma``,
+``seed``, ``lats_model``, ...) and picks out what it needs, so callers can
+construct any scheme uniformly.
+
+State mutation is *not* a policy concern: ``orchestrate`` returns a
+:class:`~repro.core.orchestrator.Plan` and the caller decides whether to
+``cluster.apply(plan)`` (which returns an undo token for speculative
+what-if planning).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, Optional, Tuple, Type
+
+import numpy as np
+
+__all__ = [
+    "PolicyContext",
+    "TaskDecision",
+    "Policy",
+    "register_policy",
+    "make_policy",
+    "available_policies",
+    "IBDASHConfig",
+    "IBDASHPolicy",
+    "RandomPolicy",
+    "RoundRobinPolicy",
+    "LAVEAPolicy",
+    "PetrelPolicy",
+    "LaTSModel",
+    "LaTSPolicy",
+]
+
+
+@dataclass(frozen=True)
+class PolicyContext:
+    """Everything a policy may inspect to place ONE task — all array-shaped.
+
+    Vectors are indexed by device id (length ``n_devices``); ``counts`` is
+    the ``(D, N)`` running-task matrix (Task_info at ``t_start``).  The
+    context is built from :class:`~repro.core.cluster.ClusterState` by the
+    ``orchestrate`` driver and never mutated; policies must treat the arrays
+    as read-only.
+    """
+
+    task: str                    # task name (for error reporting)
+    ttype: int                   # index into the task-type table
+    t_start: float               # absolute estimated start (now + stage offset)
+    stage_offset: float          # offset from app arrival (stage barrier)
+    exec_lat: np.ndarray         # (D,) Eq. (1) execution latency per device
+    upload: np.ndarray           # (D,) L(M(T_i)) model-upload latency
+    transfer: np.ndarray         # (D,) L(T_i)_d input-transfer latency
+    total: np.ndarray            # (D,) Eq. (2): exec + upload + transfer
+    feasible: np.ndarray         # (D,) bool memory-feasibility mask
+    feasible_ids: np.ndarray     # (D',) int ids where feasible
+    pf: np.ndarray               # (D,) F(T_i): P(device dies before completion)
+    lams: np.ndarray             # (D,) failure rates
+    join_times: np.ndarray       # (D,) device join times
+    queue_len: np.ndarray        # (D,) total running tasks (LAVEA's SQLF signal)
+    counts: np.ndarray           # (D, N) per-type running-task counts
+    classes: np.ndarray          # (D,) device-class ids
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.exec_lat.shape[0])
+
+
+@dataclass(frozen=True)
+class TaskDecision:
+    """A policy's verdict for one task: devices to run it on, primary first.
+
+    An empty tuple means the policy found no acceptable device (e.g. the
+    IBDASH availability floor filtered every candidate); the orchestrator
+    marks the plan infeasible at this task.
+    """
+
+    devices: Tuple[int, ...]
+
+    @property
+    def primary(self) -> int:
+        return self.devices[0]
+
+    @property
+    def n_replicas(self) -> int:
+        return max(len(self.devices) - 1, 0)
+
+
+class Policy:
+    """A pure placement policy: ``decide`` maps a context to a decision.
+
+    Implementations hold only configuration and (for randomized schemes)
+    their own rng / cursor state — never cluster state.
+    """
+
+    name: str = "base"
+
+    def decide(self, ctx: PolicyContext) -> TaskDecision:
+        raise NotImplementedError
+
+
+# -- registry -----------------------------------------------------------------
+_REGISTRY: "Dict[str, Type[Policy]]" = {}
+
+
+def register_policy(name: str) -> Callable[[Type[Policy]], Type[Policy]]:
+    """Class decorator: register a policy under ``name`` (kebab/snake case).
+
+    The registered class must accept keyword-only construction; extra
+    keywords it does not understand are ignored (``**_``) so that
+    :func:`make_policy` can pass one uniform kwarg bundle to every scheme.
+    """
+
+    def deco(cls: Type[Policy]) -> Type[Policy]:
+        if name in _REGISTRY:
+            raise ValueError(f"policy {name!r} already registered")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def make_policy(name: str, **kwargs) -> Policy:
+    """Instantiate a registered policy by name.
+
+    All callers pass the same kwarg bundle (alpha/beta/gamma/seed/
+    lats_model/...); each policy keeps what it needs.
+    """
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {name!r}; available: {sorted(_REGISTRY)}"
+        ) from None
+    return cls(**kwargs)
+
+
+def available_policies() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+# -- IBDASH (Algorithm 1's scoring + replication rule) ------------------------
+@dataclass
+class IBDASHConfig:
+    alpha: float = 0.5     # joint optimisation weight (Eq. 5)
+    beta: float = 0.1      # probability-of-failure threshold
+    gamma: int = 3         # replication degree cap
+    # When True the orchestrator drops devices whose *predicted* availability
+    # is below ``avail_floor`` from the candidate set entirely (a beyond-paper
+    # guard; disabled by default to stay faithful).
+    avail_floor: float = 0.0
+
+
+@register_policy("ibdash")
+class IBDASHPolicy(Policy):
+    """Algorithm 1, lines 16-41, as a pure function of the context."""
+
+    def __init__(
+        self,
+        config: Optional[IBDASHConfig] = None,
+        *,
+        alpha: Optional[float] = None,
+        beta: Optional[float] = None,
+        gamma: Optional[int] = None,
+        avail_floor: Optional[float] = None,
+        **_,
+    ):
+        cfg = config or IBDASHConfig()
+        over = {k: v for k, v in dict(
+            alpha=alpha, beta=beta, gamma=gamma, avail_floor=avail_floor
+        ).items() if v is not None}
+        self.cfg = replace(cfg, **over) if over else cfg
+
+    def decide(self, ctx: PolicyContext) -> TaskDecision:
+        cfg = self.cfg
+        feasible = ctx.feasible
+        if cfg.avail_floor > 0.0:
+            avail = np.exp(-ctx.lams * (ctx.t_start - ctx.join_times))
+            feasible = feasible & (avail >= cfg.avail_floor)
+        cand = np.flatnonzero(feasible)
+        if cand.size == 0:
+            return TaskDecision(devices=())
+
+        total, pf = ctx.total, ctx.pf
+        # lines 16-18: priority queue == ascending order over L(T_i).
+        order = cand[np.argsort(total[cand], kind="stable")]
+        best_total = float(total[order[0]])
+        l_ref = max(best_total, 1e-9)
+        devices = [int(order[0])]
+        comb_fail = float(pf[order[0]])
+        # line 29: weighted joint score, latency normalised by the best
+        # candidate so alpha sweeps [0,1] meaningfully.
+        weight_s = cfg.alpha * (best_total / l_ref) + (1 - cfg.alpha) * comb_fail
+
+        t_rep = 0
+        qi = 1
+        while comb_fail >= cfg.beta and t_rep < cfg.gamma and qi < order.size:  # line 30
+            did = order[qi]                                 # line 31
+            qi += 1
+            cand_total = float(total[did])
+            new_fail = comb_fail * float(pf[did])
+            weight_new = cfg.alpha * (cand_total / l_ref) + (1 - cfg.alpha) * new_fail
+            if weight_new <= weight_s:                      # line 34
+                devices.append(int(did))                    # line 35
+                comb_fail = new_fail
+                weight_s = weight_new
+                t_rep += 1                                  # line 37
+            else:
+                break                                       # line 39
+        return TaskDecision(devices=tuple(devices))
+
+
+# -- baselines (§V-D) ---------------------------------------------------------
+@register_policy("random")
+class RandomPolicy(Policy):
+    """Uniform random feasible device."""
+
+    def __init__(self, *, seed: int = 0, **_):
+        self.rng = np.random.default_rng(seed)
+
+    def decide(self, ctx: PolicyContext) -> TaskDecision:
+        return TaskDecision(devices=(int(self.rng.choice(ctx.feasible_ids)),))
+
+
+@register_policy("round_robin")
+class RoundRobinPolicy(Policy):
+    """Cyclic assignment over the feasible set."""
+
+    def __init__(self, *, seed: int = 0, **_):
+        self._next = 0
+
+    def decide(self, ctx: PolicyContext) -> TaskDecision:
+        ids = ctx.feasible_ids
+        did = int(ids[self._next % ids.size])
+        self._next += 1
+        return TaskDecision(devices=(did,))
+
+
+@register_policy("lavea")
+class LAVEAPolicy(Policy):
+    """Shortest Queue Length First (best scheme of LAVEA [6])."""
+
+    def __init__(self, *, seed: int = 0, **_):
+        pass
+
+    def decide(self, ctx: PolicyContext) -> TaskDecision:
+        ids = ctx.feasible_ids
+        q = ctx.queue_len[ids]
+        return TaskDecision(devices=(int(ids[int(np.argmin(q))]),))
+
+
+@register_policy("petrel")
+class PetrelPolicy(Policy):
+    """Power-of-two-choices randomized load balancing [7], [8]."""
+
+    def __init__(self, *, seed: int = 0, **_):
+        self.rng = np.random.default_rng(seed)
+
+    def decide(self, ctx: PolicyContext) -> TaskDecision:
+        ids = ctx.feasible_ids
+        if ids.size == 1:
+            return TaskDecision(devices=(int(ids[0]),))
+        a, b = self.rng.choice(ids, size=2, replace=False)
+        pick = a if ctx.exec_lat[a] <= ctx.exec_lat[b] else b
+        return TaskDecision(devices=(int(pick),))
+
+
+@dataclass
+class LaTSModel:
+    """Parametric latency model of LaTS [9]: log(latency) is linear in CPU
+    usage (paper Fig. 5):  lat(cls, type, usage) = base * exp(b * usage).
+
+    ``cpu_usage[cls, ttype]`` is the incremental CPU fraction one running
+    task of ``ttype`` consumes on a class-``cls`` device; the device's total
+    usage saturates at 1.0.
+    """
+
+    base: np.ndarray       # (P, N) unloaded latency per class/type
+    b: np.ndarray          # (P,) fitted log-linear slope per class
+    cpu_usage: np.ndarray  # (P, N)
+    usage_cap: float = 4.0  # >1: oversubscribed CPU still adds latency signal
+
+    def predict(self, classes: np.ndarray, ttype: int, counts: np.ndarray) -> np.ndarray:
+        usage = np.minimum(
+            (self.cpu_usage[classes] * counts).sum(axis=1), self.usage_cap
+        )
+        return self.base[classes, ttype] * np.exp(self.b[classes] * usage)
+
+
+@register_policy("lats")
+class LaTSPolicy(Policy):
+    """Latency-aware task scheduling via the latency–CPU-usage model.
+
+    LaTS predicts execution latency well but ignores data-transfer and
+    model-upload costs as well as failure probability — which is why (as in
+    the paper) it concentrates load on the single fastest device."""
+
+    def __init__(
+        self,
+        *,
+        lats_model: Optional[LaTSModel] = None,
+        model: Optional[LaTSModel] = None,
+        seed: int = 0,
+        **_,
+    ):
+        self.model = lats_model if lats_model is not None else model
+        if self.model is None:
+            raise ValueError("LaTS needs a fitted LaTSModel (lats_model=...)")
+        self.rng = np.random.default_rng(seed)
+
+    def decide(self, ctx: PolicyContext) -> TaskDecision:
+        ids = ctx.feasible_ids
+        pred = self.model.predict(ctx.classes[ids], ctx.ttype, ctx.counts[ids])
+        # Devices of the same class at saturated CPU usage produce identical
+        # predictions; break ties randomly so LaTS spreads within its
+        # favourite class instead of degenerating onto device 0.
+        lo = pred.min()
+        ties = np.flatnonzero(pred <= lo * (1.0 + 1e-9))
+        return TaskDecision(devices=(int(ids[int(self.rng.choice(ties))]),))

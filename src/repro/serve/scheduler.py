@@ -23,12 +23,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.baselines import LAVEA, Petrel, RandomScheduler, RoundRobinScheduler
+from ..api import Orchestrator
 from ..core.cluster import ClusterState, Device
 from ..core.dag import AppDAG, TaskSpec
 from ..core.interference import InterferenceModel
-from ..core.orchestrator import IBDASH, IBDASHConfig, Scheduler
-from ..sim.engine import Engine, SimResult
+from ..core.policy import make_policy
+from ..sim.engine import SimResult
 
 __all__ = ["RequestClass", "make_request_dag", "ServingFleet"]
 
@@ -75,7 +75,7 @@ def make_request_dag(req_id: str, rc: RequestClass) -> AppDAG:
 
 
 class ServingFleet:
-    """A fleet of model replicas driven by any core Scheduler policy."""
+    """A fleet of model replicas driven by any registered placement policy."""
 
     def __init__(
         self,
@@ -111,23 +111,23 @@ class ServingFleet:
         self.cluster = ClusterState(
             devices=devices, model=interference, horizon=horizon, dt=0.02
         )
-        self.scheduler = self._make_policy(policy, alpha, beta, gamma, seed)
-        self.engine = Engine(self.cluster, self.scheduler, seed=seed)
+        # Every scheme comes out of the policy registry; the online flow is
+        # the unified Orchestrator façade (submit -> step -> result).
+        self.orchestrator = Orchestrator(
+            self.cluster,
+            make_policy(policy, alpha=alpha, beta=beta, gamma=gamma, seed=seed),
+            seed=seed,
+        )
         self.horizon = horizon
 
-    @staticmethod
-    def _make_policy(policy, alpha, beta, gamma, seed) -> Scheduler:
-        if policy == "ibdash":
-            return IBDASH(IBDASHConfig(alpha=alpha, beta=beta, gamma=gamma))
-        if policy == "petrel":
-            return Petrel(seed=seed)
-        if policy == "lavea":
-            return LAVEA(seed=seed)
-        if policy == "round_robin":
-            return RoundRobinScheduler(seed=seed)
-        if policy == "random":
-            return RandomScheduler(seed=seed)
-        raise ValueError(policy)
+    @property
+    def policy(self):
+        return self.orchestrator.policy
+
+    @property
+    def engine(self):
+        """Back-compat alias for callers that poked at the raw engine."""
+        return self.orchestrator.engine
 
     def run(
         self,
@@ -142,9 +142,9 @@ class ServingFleet:
             rc = LONG if rng.random() < long_frac else SHORT
             apps.append(make_request_dag(f"#{i}", rc))
             times.append(float(rng.uniform(0.0, arrival_window)))
-        self.engine.add_arrivals(apps, sorted(times))
-        self.engine.run(until=self.horizon)
-        return self.engine.result(scenario="serving", horizon=self.horizon)
+        self.orchestrator.submit_batch(apps, sorted(times))
+        self.orchestrator.step(until=self.horizon)
+        return self.orchestrator.result(scenario="serving", horizon=self.horizon)
 
 
 def serving_interference_model(

@@ -12,7 +12,15 @@ from .profiles import (
     make_cluster,
     make_profile,
 )
-from .runner import SimConfig, make_scheduler, run_grid, run_one, sweep_alpha, sweep_gamma
+from .runner import (
+    SimConfig,
+    make_scheduler,
+    policy_for,
+    run_grid,
+    run_one,
+    sweep_alpha,
+    sweep_gamma,
+)
 
 __all__ = [
     "APP_BUILDERS",
@@ -32,6 +40,7 @@ __all__ = [
     "make_profile",
     "SimConfig",
     "make_scheduler",
+    "policy_for",
     "run_grid",
     "run_one",
     "sweep_alpha",

@@ -13,6 +13,12 @@ co-located task counts at start — times multiplicative log-normal noise.
 T_alloc bookkeeping mirrors the paper: provisional intervals are recorded at
 placement and replaced by actual intervals when tasks really start.
 
+Placement goes through the pure two-phase protocol: each arrival is planned
+with ``orchestrate(app, cluster, t, policy)`` and made real with
+``cluster.apply(plan)`` — the engine never calls a mutating ``place``.
+Prefer driving the engine through :class:`repro.api.Orchestrator`
+(``submit`` / ``step`` / ``drain``).
+
 Stage barrier: tasks of stage i+1 start only once every stage-i task has
 completed (Algorithm 1 line 44).  A task completes when any replica
 succeeds; an application instance fails as soon as any of its tasks has all
@@ -29,7 +35,8 @@ import numpy as np
 
 from ..core.cluster import ClusterState
 from ..core.dag import AppDAG
-from ..core.orchestrator import Placement, Scheduler
+from ..core.orchestrator import Placement, Scheduler, orchestrate
+from ..core.policy import Policy, make_policy
 
 __all__ = ["InstanceRecord", "SimResult", "Engine"]
 
@@ -106,11 +113,19 @@ class Engine:
     def __init__(
         self,
         cluster: ClusterState,
-        scheduler: Scheduler,
+        scheduler,
         seed: int = 0,
         noise_sigma: float = 0.10,
     ):
+        """``scheduler`` may be a pure :class:`~repro.core.policy.Policy`, a
+        registered policy name, or a legacy :class:`Scheduler` shim — every
+        placement is routed through ``orchestrate`` + ``cluster.apply``."""
         self.cluster = cluster
+        if isinstance(scheduler, str):
+            scheduler = make_policy(scheduler, seed=seed)
+        self.policy: Policy = (
+            scheduler.policy if isinstance(scheduler, Scheduler) else scheduler
+        )
         self.scheduler = scheduler
         self.noise = np.random.default_rng(seed + 17)
         self.noise_sigma = noise_sigma
@@ -198,7 +213,11 @@ class Engine:
             self.now = t
             if kind == self.ARRIVAL:
                 (app,) = payload
-                placement = self.scheduler.place(app, self.cluster, t)
+                # Two-phase protocol: pure planning, then the one blessed
+                # mutation path (records T_alloc intervals + model uploads).
+                plan = orchestrate(app, self.cluster, t, self.policy)
+                self.cluster.apply(plan)
+                placement = plan.placement
                 rec = InstanceRecord(
                     app=app.name, arrival=t, n_tasks=app.n_tasks,
                     n_replicas=placement.n_replicas(),
@@ -217,8 +236,18 @@ class Engine:
                 run, tname, ok = payload
                 self._task_end(run, tname, ok)
         self.now = until
-        # Anything still unfinished at the horizon counts as failed (the
-        # paper's cycles are long enough that this is rare).
+
+    def drain(self) -> None:
+        """Process every remaining event (online mode: no fixed horizon)."""
+        while self.events:
+            self.run(until=self.events[0][0])
+
+    def finalize(self, until: Optional[float] = None) -> None:
+        """Permanently close the books: anything still unfinished counts as
+        failed (the paper's cycles are long enough that this is rare).  Only
+        call when the run is over — mid-run snapshots should use ``result``,
+        which does NOT mutate the live records."""
+        until = self.now if until is None else until
         for rec in self.records:
             if np.isnan(rec.finished):
                 rec.failed = True
@@ -226,10 +255,22 @@ class Engine:
                 rec.service_time = until - rec.arrival
 
     def result(self, scenario: str, horizon: float) -> SimResult:
+        """Snapshot the metrics.  In-flight instances are *reported* as
+        failed-at-now (the seed's horizon semantics) via per-record copies —
+        the live records stay untouched, so a mid-run ``result`` followed by
+        ``drain`` still yields correct final numbers."""
+        from dataclasses import replace as _replace
+
+        instances = [
+            _replace(rec, failed=True, finished=self.now,
+                     service_time=self.now - rec.arrival)
+            if np.isnan(rec.finished) else rec
+            for rec in self.records
+        ]
         return SimResult(
-            scheme=self.scheduler.name,
+            scheme=self.policy.name,
             scenario=scenario,
-            instances=self.records,
+            instances=instances,
             load_per_device=self.load.copy(),
             horizon=horizon,
         )

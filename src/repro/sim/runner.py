@@ -8,6 +8,11 @@ uniform over the 8 Table-III classes.
 
 Fairness: every scheme sees the *same* environment draw — identical device
 lifetimes, arrival times and application instances (common random numbers).
+
+Every scheme is built through the policy registry
+(``make_policy(name, **kwargs)``) and driven online through the unified
+:class:`repro.api.Orchestrator` façade — there is no per-scheme
+construction code here.
 """
 from __future__ import annotations
 
@@ -16,14 +21,21 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.baselines import LAVEA, LaTS, Petrel, RandomScheduler, RoundRobinScheduler
 from ..core.dag import AppDAG
-from ..core.orchestrator import IBDASH, IBDASHConfig, Scheduler
+from ..core.policy import Policy, available_policies, make_policy
 from .apps import APP_BUILDERS
 from .engine import Engine, SimResult
 from .profiles import EdgeProfile, make_cluster, make_profile
 
-__all__ = ["SimConfig", "make_scheduler", "run_one", "run_grid", "sweep_alpha", "sweep_gamma"]
+__all__ = [
+    "SimConfig",
+    "policy_for",
+    "make_scheduler",
+    "run_one",
+    "run_grid",
+    "sweep_alpha",
+    "sweep_gamma",
+]
 
 SCHEME_NAMES = ("ibdash", "lats", "lavea", "petrel", "round_robin", "random")
 
@@ -47,20 +59,24 @@ class SimConfig:
         return self.n_cycles * self.cycle_len
 
 
-def make_scheduler(name: str, profile: EdgeProfile, cfg: SimConfig) -> Scheduler:
-    if name == "ibdash":
-        return IBDASH(IBDASHConfig(alpha=cfg.alpha, beta=cfg.beta, gamma=cfg.gamma))
-    if name == "lats":
-        return LaTS(profile.lats_model, seed=cfg.seed)
-    if name == "lavea":
-        return LAVEA(seed=cfg.seed)
-    if name == "petrel":
-        return Petrel(seed=cfg.seed)
-    if name == "round_robin":
-        return RoundRobinScheduler(seed=cfg.seed)
-    if name == "random":
-        return RandomScheduler(seed=cfg.seed)
-    raise ValueError(f"unknown scheme {name!r}")
+def policy_for(name: str, profile: EdgeProfile, cfg: SimConfig) -> Policy:
+    """Uniform registry construction: one kwarg bundle serves every scheme."""
+    return make_policy(
+        name,
+        alpha=cfg.alpha,
+        beta=cfg.beta,
+        gamma=cfg.gamma,
+        seed=cfg.seed,
+        lats_model=profile.lats_model,
+    )
+
+
+def make_scheduler(name: str, profile: EdgeProfile, cfg: SimConfig):
+    """DEPRECATED: returns the legacy pure-``place`` Scheduler shim wrapping
+    the registry policy; new code should use :func:`policy_for`."""
+    from ..core.orchestrator import Scheduler
+
+    return Scheduler(policy_for(name, profile, cfg))
 
 
 def _make_workload(cfg: SimConfig) -> Tuple[List[AppDAG], List[float]]:
@@ -86,17 +102,21 @@ def run_one(
     cfg: SimConfig,
     profile: Optional[EdgeProfile] = None,
 ) -> SimResult:
+    from ..api import Orchestrator  # lazy: api sits above sim in the layering
+
     profile = profile or make_profile(seed=cfg.seed)
     cluster = make_cluster(
         profile, scenario=cfg.scenario, n_devices=cfg.n_devices, seed=cfg.seed,
         horizon=cfg.horizon + 30.0,
     )
-    scheduler = make_scheduler(scheme, profile, cfg)
-    engine = Engine(cluster, scheduler, seed=cfg.seed, noise_sigma=cfg.noise_sigma)
+    orch = Orchestrator(
+        cluster, policy_for(scheme, profile, cfg),
+        seed=cfg.seed, noise_sigma=cfg.noise_sigma,
+    )
     apps, times = _make_workload(cfg)
-    engine.add_arrivals(apps, times)
-    engine.run(until=cfg.horizon + 25.0)
-    return engine.result(scenario=cfg.scenario, horizon=cfg.horizon)
+    orch.submit_batch(apps, times)
+    orch.step(until=cfg.horizon + 25.0)
+    return orch.result(scenario=cfg.scenario, horizon=cfg.horizon)
 
 
 def run_grid(

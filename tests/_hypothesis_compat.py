@@ -1,0 +1,45 @@
+"""Optional-hypothesis shim for the property-based tests.
+
+``hypothesis`` is a dev-only dependency (see requirements-dev.txt).  When it
+is installed, this module re-exports the real ``given``/``settings``/``st``.
+When it is not, the decorators turn each property test into a single test
+that calls ``pytest.importorskip("hypothesis")`` — so a bare checkout still
+collects and runs every example-based test instead of failing at import.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - exercised on bare checkouts
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def skipper():
+                pytest.importorskip("hypothesis")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _StrategyStub:
+        """Absorbs any attribute access / call chain (st.composite, st.lists
+        of st.integers, strategy.map, ...) at collection time."""
+
+        def __call__(self, *_args, **_kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _StrategyStub()

@@ -5,7 +5,8 @@ import shutil
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.ckpt.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
 from repro.ft.runtime import FleetMonitor, plan_remesh
@@ -133,9 +134,7 @@ def test_remesh_insufficient_pods():
         plan_remesh(["a", "b"], model_parallel=4)
 
 
-@given(n_alive=st.integers(4, 64), mp=st.sampled_from([1, 2, 4]))
-@settings(max_examples=40, deadline=None)
-def test_remesh_plan_invariants(n_alive, mp):
+def _check_remesh_plan(n_alive, mp):
     alive = [f"p{i:03d}" for i in range(n_alive)]
     plan = plan_remesh(alive, model_parallel=mp)
     data, model = plan.mesh_shape
@@ -144,6 +143,17 @@ def test_remesh_plan_invariants(n_alive, mp):
     assert data * model + len(plan.dropped_pods) == n_alive
     # deterministic: same input -> same plan
     assert plan == plan_remesh(list(reversed(alive)), model_parallel=mp)
+
+
+def test_remesh_plan_invariants_examples():
+    for n_alive, mp in [(4, 1), (5, 2), (8, 4), (17, 2), (64, 4)]:
+        _check_remesh_plan(n_alive, mp)
+
+
+@given(n_alive=st.integers(4, 64), mp=st.sampled_from([1, 2, 4]))
+@settings(max_examples=40, deadline=None)
+def test_remesh_plan_invariants(n_alive, mp):
+    _check_remesh_plan(n_alive, mp)
 
 
 def test_straggler_backup_on_flaky_primary():

@@ -1,7 +1,7 @@
 """Exponential availability model, lambda MLE, Young/Daly cadence."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.availability import (
     availability,

@@ -1,6 +1,6 @@
 """DAG staging + validation, including hypothesis property tests."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.dag import AppDAG, TaskSpec, app_stage, topological_order, validate_dag
 

@@ -1,7 +1,7 @@
 """Interference model (Eq. 1) unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.interference import InterferenceModel, fit_linear_interference
 

@@ -102,10 +102,23 @@ def test_gamma_caps_replication():
     assert len(p.tasks["t0"].replicas) <= 1 + 2
 
 
-def test_placement_commits_talloc():
+def test_place_is_pure_and_apply_commits_talloc():
+    from repro.core.orchestrator import orchestrate
+
+    cluster = make_cluster()
+    # planning alone must not touch T_alloc ...
+    plan = orchestrate(single_task_app(), cluster, now=0.0, policy=IBDASH().policy)
+    assert cluster.counts_at(0.01)[0, 0] == 0
+    assert (cluster.alloc == 0).all()
+    # ... the explicit apply step records the interval
+    cluster.apply(plan)
+    assert cluster.counts_at(0.01)[0, 0] >= 1           # interval recorded
+
+
+def test_legacy_place_shim_no_longer_mutates():
     cluster = make_cluster()
     IBDASH().place(single_task_app(), cluster, now=0.0)
-    assert cluster.counts_at(0.01)[0, 0] >= 1           # interval recorded
+    assert (cluster.alloc == 0).all()
 
 
 def test_eq3_stage_sum():

@@ -1,0 +1,404 @@
+"""The redesigned pure policy API: registry, two-phase plan/apply/undo,
+bit-parity with the seed schedulers, and the online Orchestrator façade."""
+from collections import OrderedDict
+
+import numpy as np
+import pytest
+
+import _legacy_reference as legacy
+from repro.api import Orchestrator, make_policy, orchestrate
+from repro.core.cluster import ClusterState, Device
+from repro.core.dag import AppDAG, TaskSpec
+from repro.core.interference import InterferenceModel
+from repro.core.orchestrator import Plan, Placement, Replica, TaskPlacement
+from repro.core.policy import (
+    Policy,
+    PolicyContext,
+    TaskDecision,
+    available_policies,
+    register_policy,
+)
+from repro.sim import SimConfig, make_cluster, make_profile
+from repro.sim.runner import SCHEME_NAMES, _make_workload, policy_for
+
+GB = 1e9
+MB = 1e6
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return make_profile(seed=0)
+
+
+def small_cluster(n=4, lam=1e-6, mem=8 * GB, bw=100e6):
+    model = InterferenceModel(
+        base=np.linspace(0.1, 0.4, n)[:, None],
+        slope=np.full((n, 1, 1), 0.05),
+    )
+    devices = [
+        Device(did=i, cls=i, mem_total=mem, lam=lam, bandwidth=bw)
+        for i in range(n)
+    ]
+    return ClusterState(devices=devices, model=model, horizon=100.0, dt=0.05)
+
+
+def chain_app(model_id=None, model_bytes=0.0):
+    return AppDAG.from_tasks("app", [
+        TaskSpec("a", ttype=0, out_bytes=5 * MB, model_id=model_id,
+                 model_bytes=model_bytes),
+        TaskSpec("b", ttype=0, deps=("a",), model_id=model_id,
+                 model_bytes=model_bytes),
+    ])
+
+
+# ---------------------------------------------------------------- registry --
+def test_registry_has_all_six_schemes():
+    assert set(SCHEME_NAMES) <= set(available_policies())
+
+
+def test_make_policy_unknown_name():
+    with pytest.raises(ValueError, match="unknown policy"):
+        make_policy("definitely-not-a-policy")
+
+
+def test_make_policy_uniform_kwarg_bundle(profile):
+    # one kwarg bundle constructs every scheme; extras are ignored
+    for name in SCHEME_NAMES:
+        pol = make_policy(
+            name, alpha=0.3, beta=0.05, gamma=2, seed=7,
+            lats_model=profile.lats_model,
+        )
+        assert pol.name == name
+    ib = make_policy("ibdash", alpha=0.3, beta=0.05, gamma=2, seed=7)
+    assert (ib.cfg.alpha, ib.cfg.beta, ib.cfg.gamma) == (0.3, 0.05, 2)
+
+
+def test_register_policy_duplicate_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+
+        @register_policy("ibdash")
+        class Dup(Policy):
+            pass
+
+
+def test_custom_policy_pluggable():
+    # a 3-line user policy slots straight into orchestrate()
+    class Slowest(Policy):
+        name = "slowest"
+
+        def decide(self, ctx: PolicyContext) -> TaskDecision:
+            ids = ctx.feasible_ids
+            return TaskDecision(devices=(int(ids[np.argmax(ctx.total[ids])]),))
+
+    cluster = small_cluster()
+    plan = orchestrate(chain_app(), cluster, 0.0, Slowest())
+    assert plan.feasible
+    assert plan.tasks["a"].replicas[0].did == 3        # base 0.4 is slowest
+
+
+# ------------------------------------------------------- plan / apply / undo --
+def snapshot(cluster):
+    return (
+        cluster.alloc.copy(),
+        [(d.mem_free, OrderedDict(d.model_cache)) for d in cluster.devices],
+    )
+
+
+def state_equal(cluster, snap):
+    alloc, devs = snap
+    if not np.array_equal(cluster.alloc, alloc):
+        return False
+    for d, (mem_free, cache) in zip(cluster.devices, devs):
+        if d.mem_free != mem_free:
+            return False
+        if list(d.model_cache.items()) != list(cache.items()):
+            return False
+    return True
+
+
+def test_plan_is_pure():
+    cluster = small_cluster()
+    before = snapshot(cluster)
+    plan = orchestrate(chain_app(model_id="m", model_bytes=200 * MB),
+                       cluster, 0.0, make_policy("ibdash"))
+    assert plan.feasible
+    assert state_equal(cluster, before)
+
+
+def test_apply_undo_roundtrips_exactly():
+    cluster = small_cluster()
+    # pre-existing cache content so undo must restore LRU order, not just size
+    cluster.devices[0].admit_model("old-a", 100 * MB)
+    cluster.devices[0].admit_model("old-b", 100 * MB)
+    cluster.devices[0].touch_model("old-a")
+    before = snapshot(cluster)
+
+    plan = orchestrate(chain_app(model_id="m", model_bytes=500 * MB),
+                       cluster, 0.0, make_policy("ibdash"))
+    token = cluster.apply(plan)
+    assert token.applied
+    assert not state_equal(cluster, before)             # intervals + model admitted
+    cluster.undo(token)
+    assert state_equal(cluster, before)                 # alloc tensor + caches exact
+    cluster.undo(token)                                 # idempotent
+    assert state_equal(cluster, before)
+
+
+def test_apply_restores_lru_eviction_on_undo():
+    # tiny device: admitting the new model evicts the resident one; undo must
+    # bring the evicted model back in its original order
+    cluster = small_cluster(mem=1 * GB)
+    dev = cluster.devices[0]
+    dev.admit_model("resident", 800 * MB)
+    before = snapshot(cluster)
+
+    app = AppDAG.from_tasks("app", [TaskSpec(
+        "t", ttype=0, model_id="big", model_bytes=900 * MB,
+    )])
+    # force placement onto device 0
+    class Pin(Policy):
+        name = "pin"
+
+        def decide(self, ctx):
+            return TaskDecision(devices=(0,))
+
+    plan = orchestrate(app, cluster, 0.0, Pin())
+    token = cluster.apply(plan)
+    assert "resident" not in dev.model_cache and "big" in dev.model_cache
+    cluster.undo(token)
+    assert state_equal(cluster, before)
+
+
+def test_apply_surfaces_unfittable_model():
+    # A model larger than the device's total memory cannot be admitted even
+    # after full LRU eviction; apply must roll back and mark the plan
+    # infeasible instead of silently pretending the model is cached.
+    cluster = small_cluster(mem=1 * GB)
+    app = AppDAG.from_tasks("app", [TaskSpec(
+        "t", ttype=0, model_id="huge", model_bytes=2 * GB,
+    )])
+    placement = Placement(
+        app_name="app",
+        tasks={"t": TaskPlacement(
+            task="t", ttype=0,
+            replicas=[Replica(did=1, est_exec=0.2, est_upload=1.0,
+                              est_transfer=0.0, pred_fail=0.0)],
+            est_start=0.0, est_latency=1.2,
+        )},
+        est_latency=1.2,
+    )
+    before = snapshot(cluster)
+    token = cluster.apply(Plan(app=app, now=0.0, placement=placement))
+    assert not token.applied
+    assert not placement.feasible and placement.infeasible_task == "t"
+    assert state_equal(cluster, before)                 # fully rolled back
+
+
+def test_infeasible_plan_apply_is_noop():
+    cluster = small_cluster(mem=1 * GB)
+    app = AppDAG.from_tasks("app", [TaskSpec("t", ttype=0, mem_bytes=2 * GB)])
+    plan = orchestrate(app, cluster, 0.0, make_policy("ibdash"))
+    assert not plan.feasible and plan.placement.infeasible_task == "t"
+    before = snapshot(cluster)
+    token = cluster.apply(plan)
+    assert not token.applied
+    assert state_equal(cluster, before)
+
+
+def test_speculative_what_if_sweep_leaves_state_intact():
+    # alpha/gamma what-if: plan+apply+undo many variants, state must be
+    # bit-identical afterwards, then the real apply still works
+    cluster = small_cluster(lam=5e-1)
+    app = chain_app(model_id="m", model_bytes=100 * MB)
+    before = snapshot(cluster)
+    est = {}
+    for alpha in (0.0, 0.3, 0.7, 1.0):
+        plan = orchestrate(app, cluster, 0.0,
+                           make_policy("ibdash", alpha=alpha, beta=0.01))
+        token = cluster.apply(plan)
+        est[alpha] = (plan.est_latency, plan.placement.pred_app_fail)
+        cluster.undo(token)
+    assert state_equal(cluster, before)
+    assert len({v for v in est.values()}) > 1           # sweep actually varied
+
+
+# ------------------------------------------------------------------ parity --
+def _same_placement(a, b):
+    assert a.feasible == b.feasible
+    assert a.infeasible_task == b.infeasible_task
+    assert a.est_latency == b.est_latency
+    assert set(a.tasks) == set(b.tasks)
+    for k in a.tasks:
+        ta, tb = a.tasks[k], b.tasks[k]
+        assert [r.did for r in ta.replicas] == [r.did for r in tb.replicas]
+        assert ta.est_start == tb.est_start
+        assert ta.est_latency == tb.est_latency
+        for ra, rb in zip(ta.replicas, tb.replicas):
+            assert ra.est_exec == rb.est_exec
+            assert ra.est_upload == rb.est_upload
+            assert ra.est_transfer == rb.est_transfer
+            assert ra.pred_fail == rb.pred_fail
+
+
+@pytest.mark.parametrize("scheme", SCHEME_NAMES)
+@pytest.mark.parametrize("scenario", ("ced", "ped", "mix"))
+def test_policy_parity_with_seed_scheduler(profile, scheme, scenario):
+    """Registry policies reproduce the SEED's placements bit-for-bit on the
+    (miniaturised) Fig. 8/9 grid — device ids, replica sets, latency
+    estimates, and the full evolution of T_alloc + model caches."""
+    cfg = SimConfig(n_cycles=1, instances_per_cycle=60, scenario=scenario,
+                    seed=0, n_devices=32)
+    apps, times = _make_workload(cfg)
+    mk = lambda: make_cluster(profile, scenario=cfg.scenario,
+                              n_devices=cfg.n_devices, seed=cfg.seed,
+                              horizon=cfg.horizon + 30.0)
+    c_old, c_new = mk(), mk()
+    old = legacy.make_legacy_scheduler(
+        scheme, lats_model=profile.lats_model, seed=cfg.seed,
+        alpha=cfg.alpha, beta=cfg.beta, gamma=cfg.gamma,
+    )
+    pol = policy_for(scheme, profile, cfg)
+    for app, t in zip(apps, times):
+        p_old = old.place(app, c_old, t)                # seed: mutates inside
+        plan = orchestrate(app, c_new, t, pol)          # new: pure + apply
+        c_new.apply(plan)
+        _same_placement(p_old, plan.placement)
+    assert np.array_equal(c_old.alloc, c_new.alloc)
+    for da, db in zip(c_old.devices, c_new.devices):
+        assert da.mem_free == db.mem_free
+        assert list(da.model_cache.items()) == list(db.model_cache.items())
+
+
+def test_ibdash_replication_parity_flaky_fleet():
+    """Replication loop parity on a fleet flaky enough to trigger it."""
+    model = InterferenceModel(
+        base=np.array([[0.1], [0.101], [0.102], [0.103]]),
+        slope=np.full((4, 1, 1), 0.05),
+    )
+    mk = lambda: ClusterState(
+        devices=[Device(did=i, cls=i, mem_total=8 * GB, lam=5e-1,
+                        bandwidth=100e6) for i in range(4)],
+        model=model, horizon=100.0, dt=0.05,
+    )
+    from repro.core.orchestrator import IBDASHConfig
+
+    cfg = IBDASHConfig(alpha=0.2, beta=0.01, gamma=3)
+    app = chain_app()
+    c_old, c_new = mk(), mk()
+    p_old = legacy.LegacyIBDASH(cfg).place(app, c_old, 0.0)
+    plan = orchestrate(app, c_new, 0.0, make_policy("ibdash", config=cfg))
+    c_new.apply(plan)
+    assert len(p_old.tasks["a"].replicas) > 1           # replication happened
+    _same_placement(p_old, plan.placement)
+
+
+# ------------------------------------------------------------- orchestrator --
+def test_orchestrator_online_submit_step_drain(profile):
+    cfg = SimConfig(n_cycles=1, instances_per_cycle=40, scenario="ped", seed=1,
+                    n_devices=16)
+    cluster = make_cluster(profile, scenario=cfg.scenario,
+                           n_devices=cfg.n_devices, seed=cfg.seed,
+                           horizon=cfg.horizon + 30.0)
+    apps, times = _make_workload(cfg)
+    orch = Orchestrator(cluster, "ibdash", seed=cfg.seed)
+    orch.submit_batch(apps, times)
+    orch.step(until=0.75)                               # mid-burst
+    assert 0 < len(orch.records) < len(apps)            # online, not batch
+    orch.drain()
+    assert len(orch.records) == len(apps)
+    assert orch.pending_events == 0
+    res = orch.result("ped", horizon=cfg.horizon)
+    assert res.n == len(apps)
+    assert all(np.isfinite(r.finished) for r in res.instances)
+
+
+def test_midrun_result_is_nonmutating_snapshot(profile):
+    """result() mid-run reports in-flight instances as failed-at-now without
+    corrupting the live records — drain + final result stay correct."""
+    cfg = SimConfig(n_cycles=1, instances_per_cycle=40, scenario="ped", seed=1,
+                    n_devices=16)
+    mk = lambda: make_cluster(profile, scenario=cfg.scenario,
+                              n_devices=cfg.n_devices, seed=cfg.seed,
+                              horizon=cfg.horizon + 30.0)
+    apps, times = _make_workload(cfg)
+
+    ref = Orchestrator(mk(), "ibdash", seed=cfg.seed)
+    ref.submit_batch(apps, times)
+    ref.drain()
+    ref_res = ref.result("ped", horizon=cfg.horizon)
+
+    orch = Orchestrator(mk(), "ibdash", seed=cfg.seed)
+    orch.submit_batch(apps, times)
+    orch.step(until=0.75)
+    mid = orch.result("ped", horizon=cfg.horizon)       # snapshot mid-flight
+    assert any(r.failed for r in mid.instances)         # in-flight reported
+    orch.drain()
+    res = orch.result("ped", horizon=cfg.horizon)
+    assert res.prob_failure == ref_res.prob_failure
+    assert res.avg_service_time == pytest.approx(ref_res.avg_service_time)
+
+
+def test_engine_string_policy_uses_seed(profile):
+    """Engine built with a policy *name* must honour its seed argument."""
+    from repro.sim.engine import Engine
+
+    a = Engine(small_cluster(), "random", seed=5)
+    b = Engine(small_cluster(), "random", seed=5)
+    c = Engine(small_cluster(), "random", seed=6)
+    draws = lambda e: [int(e.policy.rng.integers(1000)) for _ in range(8)]
+    da, db, dc = draws(a), draws(b), draws(c)
+    assert da == db
+    assert da != dc
+
+
+def test_orchestrator_matches_run_one(profile):
+    """run_one routes through the façade; driving it by hand is identical."""
+    from repro.sim import run_one
+
+    cfg = SimConfig(n_cycles=1, instances_per_cycle=60, scenario="mix", seed=2,
+                    n_devices=24)
+    ref = run_one("petrel", cfg, profile)
+
+    cluster = make_cluster(profile, scenario=cfg.scenario,
+                           n_devices=cfg.n_devices, seed=cfg.seed,
+                           horizon=cfg.horizon + 30.0)
+    orch = Orchestrator(cluster, policy_for("petrel", profile, cfg),
+                        seed=cfg.seed, noise_sigma=cfg.noise_sigma)
+    apps, times = _make_workload(cfg)
+    orch.submit_batch(apps, times)
+    orch.step(until=cfg.horizon + 25.0)
+    res = orch.result(cfg.scenario, horizon=cfg.horizon)
+    assert res.avg_service_time == pytest.approx(ref.avg_service_time)
+    assert res.prob_failure == ref.prob_failure
+    assert (res.load_per_device == ref.load_per_device).all()
+
+
+def test_orchestrator_policy_name_construction():
+    cluster = small_cluster()
+    orch = Orchestrator(cluster, "round_robin")
+    app = AppDAG.from_tasks("app", [TaskSpec("t", ttype=0)])
+    dids = [orch.plan(app, now=0.0).tasks["t"].replicas[0].did
+            for _ in range(4)]
+    assert dids == [0, 1, 2, 3]                          # registry-built policy
+
+
+def test_stage_context_reused_across_stage_tasks():
+    """One T_alloc snapshot + one Eq.(1) vector per (stage, ttype), shared by
+    every task in the stage (the burst-placement fast path)."""
+    calls = []
+    cluster = small_cluster()
+    orig = cluster.model.estimate_devices
+
+    def counting(classes, ttype, counts):
+        calls.append(ttype)
+        return orig(classes, ttype, counts)
+
+    cluster.model.estimate_devices = counting
+    app = AppDAG.from_tasks("app", [
+        TaskSpec("a1", ttype=0), TaskSpec("a2", ttype=0),
+        TaskSpec("a3", ttype=0),
+        TaskSpec("b1", ttype=0, deps=("a1", "a2", "a3")),
+    ])
+    orchestrate(app, cluster, 0.0, make_policy("lavea"))
+    # stage 0 has three type-0 tasks -> ONE estimate call; stage 1 -> one more
+    assert calls == [0, 0]
