@@ -1,0 +1,164 @@
+"""Burst-placement throughput: scalar per-task loop vs one fused batched
+call (the PR-2 batched placement API).
+
+Plans B application instances arriving simultaneously on the paper's
+100-device mix fleet with IBDASH, through both paths:
+
+  * scalar  — ``orchestrate(app, ..., batched=False)`` per instance: the
+    PR-1 per-task ``decide(ctx)`` loop.
+  * batched — ``orchestrate_batch(apps, ...)``: one deduplicated
+    ``BatchedPolicyContext`` + one fused ``decide_batch`` call per
+    wave-stage.
+
+Both paths are pure planning against the same snapshot and are bit-identical
+(asserted here on every run).  Writes ``BENCH_place.json`` with
+placements/sec at B ∈ {1, 64, 1000}; ``--check BASELINE.json`` exits
+non-zero on a >2x regression of the batched-vs-scalar speedup ratio against
+the committed baseline (used by CI; the ratio is gated rather than absolute
+throughput so the check is portable across runner hardware).
+
+    PYTHONPATH=src python -m benchmarks.bench_place \
+        [--out BENCH_place.json] [--check benchmarks/BENCH_place.baseline.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+BATCH_SIZES = (1, 64, 1000)
+REGRESSION_FACTOR = 2.0
+
+
+def _workload(B: int, seed: int = 1):
+    from repro.sim.apps import APP_BUILDERS
+
+    builders = list(APP_BUILDERS.values())
+    rng = np.random.default_rng(seed)
+    return [
+        builders[int(rng.integers(len(builders)))]().relabel(f"#{i}")
+        for i in range(B)
+    ]
+
+
+def _same_plans(plans_a, plans_b) -> None:
+    for a, b in zip(plans_a, plans_b):
+        assert a.placement.feasible == b.placement.feasible
+        assert a.placement.est_latency == b.placement.est_latency
+        for k, tp in a.placement.tasks.items():
+            other = b.placement.tasks[k]
+            assert [r.did for r in tp.replicas] == [r.did for r in other.replicas]
+
+
+def measure(scheme: str = "ibdash", n_devices: int = 100, seed: int = 0):
+    from repro.api import orchestrate, orchestrate_batch
+    from repro.sim import SimConfig, make_cluster, make_profile
+    from repro.sim.runner import policy_for
+
+    cfg = SimConfig(seed=seed)
+    profile = make_profile(seed=seed)
+    cluster = make_cluster(
+        profile, scenario="mix", n_devices=n_devices, seed=seed, horizon=400.0
+    )
+    results = {}
+    for B in BATCH_SIZES:
+        apps = _workload(B)
+        # warm up the jitted kernels at this wave shape, and assert parity
+        pol = policy_for(scheme, profile, cfg)
+        plans_b = orchestrate_batch(apps, cluster, pol)
+        pol = policy_for(scheme, profile, cfg)
+        _same_plans(
+            plans_b,
+            [orchestrate(app, cluster, 0.0, pol, batched=False) for app in apps],
+        )
+
+        reps = max(1, 2000 // B)
+        pol = policy_for(scheme, profile, cfg)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            orchestrate_batch(apps, cluster, pol)
+        batched_s = (time.perf_counter() - t0) / reps
+
+        pol = policy_for(scheme, profile, cfg)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            for app in apps:
+                orchestrate(app, cluster, 0.0, pol, batched=False)
+        scalar_s = (time.perf_counter() - t0) / reps
+
+        results[str(B)] = {
+            "scalar_pps": B / scalar_s,
+            "batched_pps": B / batched_s,
+            "speedup": scalar_s / batched_s,
+        }
+    return {
+        "scheme": scheme,
+        "n_devices": n_devices,
+        "n_tasks_per_instance": float(np.mean([a.n_tasks for a in _workload(64)])),
+        "results": results,
+    }
+
+
+def check(report: dict, baseline_path: str) -> int:
+    """Fail on a >2x regression of the batched-vs-scalar SPEEDUP ratio.
+
+    The gate compares the ratio, not absolute placements/sec: both paths
+    run on the same machine in the same job, so the ratio is portable
+    across runner hardware while absolute throughput is not.
+    """
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    failures = []
+    for B, row in baseline["results"].items():
+        got = report["results"].get(B)
+        if got is None:
+            failures.append(f"B={B}: missing from report")
+            continue
+        floor = row["speedup"] / REGRESSION_FACTOR
+        if got["speedup"] < floor:
+            failures.append(
+                f"B={B}: batched/scalar speedup {got['speedup']:.2f}x < "
+                f"{floor:.2f}x (baseline {row['speedup']:.2f}x / "
+                f"{REGRESSION_FACTOR})"
+            )
+    for msg in failures:
+        print(f"REGRESSION {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def run(ctx) -> None:
+    """benchmarks.run entry point: emit CSV rows + write BENCH_place.json."""
+    report = measure()
+    for B, row in report["results"].items():
+        ctx.emit(f"place_scalar_pps_B{B}", row["scalar_pps"])
+        ctx.emit(f"place_batched_pps_B{B}", row["batched_pps"])
+        ctx.emit(f"place_speedup_B{B}", row["speedup"])
+    with open("BENCH_place.json", "w") as f:
+        json.dump(report, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_place.json")
+    ap.add_argument("--check", default=None,
+                    help="baseline json; exit 1 on >2x throughput regression")
+    args = ap.parse_args()
+    report = measure()
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    for B, row in report["results"].items():
+        print(f"B={B:>5s}  scalar {row['scalar_pps']:10.1f} pl/s  "
+              f"batched {row['batched_pps']:10.1f} pl/s  "
+              f"speedup {row['speedup']:6.2f}x")
+    if args.check:
+        sys.exit(check(report, args.check))
+
+
+if __name__ == "__main__":
+    main()

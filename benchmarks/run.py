@@ -20,6 +20,7 @@ from . import (
     bench_interference,
     bench_load,
     bench_microscopic,
+    bench_place,
     bench_profiles,
     bench_roofline,
     bench_service_time,
@@ -37,6 +38,7 @@ BENCHES = {
     "load": bench_load,                   # Fig. 10
     "microscopic": bench_microscopic,     # Fig. 11
     "alpha_gamma": bench_alpha_gamma,     # Fig. 12
+    "place": bench_place,                 # beyond-paper burst placement
     "serving": bench_serving,             # beyond-paper fleet policies
     "roofline": bench_roofline,           # §Roofline (dry-run grid)
     "serving_shard": bench_serving_shard, # beyond-paper TP serving sharding

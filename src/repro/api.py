@@ -24,6 +24,10 @@ Quick tour::
     orch.step(until=15.0)                   # one paper cycle
     res = orch.result("mix", horizon=15.0)
 
+    # fused burst: ONE batched decide_batch kernel call per wave-stage
+    # places all 1000 instances at once (plans share one fleet snapshot)
+    orch.submit_batch(apps, times, fused=True)
+
     # speculative what-if: plan, inspect, roll back
     plan = orch.plan(app, now=0.0)
     token = orch.commit(plan)
@@ -36,6 +40,7 @@ from typing import List, Optional, Sequence, Union
 from .core.cluster import ApplyToken, ClusterState, Device
 from .core.dag import AppDAG, TaskSpec
 from .core.interference import InterferenceModel
+from .core.batched import BatchedDecision, BatchedPolicyContext, FleetSnapshot
 from .core.orchestrator import (
     IBDASHConfig,
     Placement,
@@ -43,6 +48,7 @@ from .core.orchestrator import (
     Replica,
     TaskPlacement,
     orchestrate,
+    orchestrate_batch,
 )
 from .core.policy import (
     Policy,
@@ -57,6 +63,7 @@ from .sim.engine import Engine, InstanceRecord, SimResult
 __all__ = [
     "Orchestrator",
     "orchestrate",
+    "orchestrate_batch",
     "Plan",
     "Placement",
     "TaskPlacement",
@@ -64,6 +71,9 @@ __all__ = [
     "Policy",
     "PolicyContext",
     "TaskDecision",
+    "FleetSnapshot",
+    "BatchedPolicyContext",
+    "BatchedDecision",
     "register_policy",
     "make_policy",
     "available_policies",
@@ -113,15 +123,40 @@ class Orchestrator:
         return self
 
     def submit_batch(
-        self, apps: Sequence[AppDAG], times: Sequence[float]
+        self,
+        apps: Sequence[AppDAG],
+        times: Sequence[float],
+        *,
+        fused: bool = False,
     ) -> "Orchestrator":
         """Enqueue a burst of simultaneous/clustered arrivals (the paper's
-        ~1000 instances inside 1.5 s).  Placement work shared across each
-        app's stage — the T_alloc snapshot and per-type Eq. (1) vectors —
-        is built once per stage by the context builder."""
+        ~1000 instances inside 1.5 s).
+
+        ``fused=False`` (default): each arrival is planned when its event
+        fires, so later arrivals see earlier arrivals' provisional T_alloc
+        occupancy — the sequential Fig. 8/9 semantics.
+
+        ``fused=True``: the whole burst is planned NOW against the current
+        cluster snapshot by :func:`orchestrate_batch` — one batched context
+        and one fused ``decide_batch`` kernel call per wave-stage places all
+        B instances at once (~10x+ placement throughput at B=1000; see
+        ``benchmarks/bench_place.py``).  Plans are applied at each arrival's
+        event time as usual.  Because the plans share one snapshot they do
+        not see each other's provisional load, so a heavy burst concentrates
+        onto the devices that look best in that snapshot — use the fused
+        mode when planning throughput dominates (admission control, what-if
+        sweeps, light-load waves), and the default sequential mode when
+        load-aware spreading matters.
+        """
         if len(apps) != len(times):
             raise ValueError("apps and times must have equal length")
-        self.engine.add_arrivals(list(apps), list(times))
+        if fused:
+            plans = orchestrate_batch(
+                list(apps), self.cluster, self.policy, times=list(times)
+            )
+            self.engine.add_arrivals(list(apps), list(times), plans=plans)
+        else:
+            self.engine.add_arrivals(list(apps), list(times))
         return self
 
     def step(self, until: float) -> "Orchestrator":

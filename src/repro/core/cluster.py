@@ -19,12 +19,14 @@ becomes HBM headroom, and task types become job classes.
 """
 from __future__ import annotations
 
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .batched import FleetSnapshot
 from .interference import InterferenceModel
 
 __all__ = ["Device", "ClusterState", "ApplyToken"]
@@ -127,6 +129,7 @@ class ClusterState:
             (len(self.devices), self.model.n_types, self.n_buckets),
             dtype=np.float32,
         )
+        self._horizon_warned = False
 
     # -- static fleet views ------------------------------------------------------
     @property
@@ -156,10 +159,35 @@ class ClusterState:
     def add_interval(
         self, did: int, ttype: int, t0: float, t1: float, w: float = 1.0
     ) -> None:
-        """Record that a ``ttype`` task occupies device ``did`` over [t0, t1)."""
+        """Record that a ``ttype`` task occupies device ``did`` over [t0, t1).
+
+        Intervals reaching past ``horizon`` are clipped to it (with a
+        one-time warning) instead of being silently clamped into the final
+        T_alloc bucket, where their occupancy would otherwise pile up and
+        corrupt late-horizon Eq. (1) estimates.  Clipping is a pure function
+        of ``(t0, t1)``, so undo/replacement passes (negative ``w``) cancel
+        the exact same buckets.
+        """
+        if t1 > self.horizon:
+            self._warn_horizon(t1)
+            t1 = self.horizon
+        if t0 >= self.horizon:
+            return                      # entirely past the recorded window
         b0 = self.bucket(t0)
         b1 = max(self.bucket(t1), b0 + 1)  # at least one bucket
         self.alloc[did, ttype, b0:b1] += w
+
+    def _warn_horizon(self, t1: float) -> None:
+        if self._horizon_warned:
+            return
+        self._horizon_warned = True
+        warnings.warn(
+            f"T_alloc interval extends to t={t1:.2f}s past horizon="
+            f"{self.horizon:.2f}s; clipping occupancy at the horizon "
+            "(build the cluster with a larger `horizon` to track it)",
+            RuntimeWarning,
+            stacklevel=3,
+        )
 
     def counts_at(self, t: float) -> np.ndarray:
         """Task_info snapshot at time t: (D, N) running-task counts.
@@ -186,6 +214,37 @@ class ClusterState:
     def queue_len_at(self, t: float) -> np.ndarray:
         """(D,) total running tasks per device (LAVEA's SQLF signal)."""
         return np.asarray(self.counts_at(t), dtype=np.float64).sum(axis=1)
+
+    def snapshot(
+        self,
+        t: float,
+        *,
+        counts: Optional[np.ndarray] = None,
+        join_times: Optional[np.ndarray] = None,
+    ) -> FleetSnapshot:
+        """Struct-of-arrays :class:`FleetSnapshot` of the fleet at time
+        ``t``: the static device vectors plus the Task_info counts — the
+        batched policies' whole world view, as one pytree.
+
+        ``counts``/``join_times`` let hot callers (the wave context
+        builder) pass their cached copies; this stays the single
+        construction site for snapshots."""
+        if counts is None:
+            counts = np.asarray(self.counts_at(t), dtype=np.float64)
+        if join_times is None:
+            join_times = np.array([d.join_time for d in self.devices])
+        return FleetSnapshot(
+            t=t,
+            classes=self._classes,
+            lams=self._lams,
+            bandwidths=self._bw,
+            mem_total=self._mem_total,
+            join_times=join_times,
+            counts=counts,
+            queue_len=counts.sum(axis=1),
+            base=self.model.base,
+            slope=self.model.slope,
+        )
 
     # -- the one blessed mutation path ----------------------------------------
     def apply(self, plan) -> ApplyToken:

@@ -37,9 +37,22 @@ from typing import Callable, Dict, Optional, Tuple, Type
 
 import numpy as np
 
+from .batched import (
+    BatchedDecision,
+    BatchedPolicyContext,
+    FleetSnapshot,
+    BATCH_KERNEL_MIN_ROWS,
+    ibdash_decide_batch,
+    lavea_decide_batch,
+    round_robin_decide_batch,
+)
+
 __all__ = [
     "PolicyContext",
     "TaskDecision",
+    "FleetSnapshot",
+    "BatchedPolicyContext",
+    "BatchedDecision",
     "Policy",
     "register_policy",
     "make_policy",
@@ -113,12 +126,26 @@ class Policy:
 
     Implementations hold only configuration and (for randomized schemes)
     their own rng / cursor state — never cluster state.
+
+    ``decide_batch`` is the fused entry point: one call decides all B rows
+    of a :class:`~repro.core.batched.BatchedPolicyContext`.  Batch semantics
+    are DEFINED as processing the rows in order, exactly as if ``decide``
+    were called once per row — stateful policies (rng streams, the
+    round-robin cursor) consume their state once per row with a non-empty
+    feasible set, in row order.  The default implementation is that loop;
+    registered policies override it with vectorised (jax.numpy / numpy)
+    implementations that are bit-identical to the loop.
     """
 
     name: str = "base"
 
     def decide(self, ctx: PolicyContext) -> TaskDecision:
         raise NotImplementedError
+
+    def decide_batch(self, batch: BatchedPolicyContext) -> BatchedDecision:
+        return BatchedDecision(devices=tuple(
+            self.decide(batch.row(b)).devices for b in range(batch.n_rows)
+        ))
 
 
 # -- registry -----------------------------------------------------------------
@@ -200,11 +227,51 @@ class IBDASHPolicy(Policy):
         if cfg.avail_floor > 0.0:
             avail = np.exp(-ctx.lams * (ctx.t_start - ctx.join_times))
             feasible = feasible & (avail >= cfg.avail_floor)
+        return TaskDecision(devices=self._score(ctx.total, ctx.pf, feasible))
+
+    def decide_batch(self, batch: BatchedPolicyContext) -> BatchedDecision:
+        """All B rows in one fused call: the scoring + replication loop as a
+        jitted ``lax.scan`` vmapped over rows (see
+        :func:`repro.core.batched.ibdash_decide_batch`).  Bit-identical to
+        looping :meth:`decide`.
+
+        IBDASH is stateless, so it decides once per DISTINCT context row
+        (the batch's pool) and fans the decision out — a 1000-instance
+        burst of a few app types collapses to a handful of scored rows.
+        Small pools take the scalar loop directly (jit dispatch would
+        dominate)."""
+        cfg = self.cfg
+        feasible = batch.feasible_pool
+        if cfg.avail_floor > 0.0:
+            t_pool = batch.t_start[batch.pool_first]
+            avail = np.exp(
+                -batch.lams[None, :]
+                * (t_pool[:, None] - batch.join_times[None, :])
+            )
+            feasible = feasible & (avail >= cfg.avail_floor)
+        if batch.n_distinct < BATCH_KERNEL_MIN_ROWS:
+            pool_dec = [
+                self._score(batch.total_pool[g], batch.pf_pool[g], feasible[g])
+                for g in range(batch.n_distinct)
+            ]
+        else:
+            pool_dec = ibdash_decide_batch(
+                batch.total_pool, batch.pf_pool, feasible,
+                cfg.alpha, cfg.beta, cfg.gamma,
+            )
+        return BatchedDecision(devices=tuple(
+            pool_dec[g] for g in batch.row_pool.tolist()
+        ))
+
+    def _score(
+        self, total: np.ndarray, pf: np.ndarray, feasible: np.ndarray
+    ) -> Tuple[int, ...]:
+        """Algorithm 1 lines 16-41 for ONE task (the scalar reference)."""
+        cfg = self.cfg
         cand = np.flatnonzero(feasible)
         if cand.size == 0:
-            return TaskDecision(devices=())
+            return ()
 
-        total, pf = ctx.total, ctx.pf
         # lines 16-18: priority queue == ascending order over L(T_i).
         order = cand[np.argsort(total[cand], kind="stable")]
         best_total = float(total[order[0]])
@@ -230,10 +297,13 @@ class IBDASHPolicy(Policy):
                 t_rep += 1                                  # line 37
             else:
                 break                                       # line 39
-        return TaskDecision(devices=tuple(devices))
+        return tuple(devices)
 
 
 # -- baselines (§V-D) ---------------------------------------------------------
+# All baselines return an empty decision on an empty feasible set (like
+# IBDASH) so the orchestrator can mark the plan infeasible instead of the
+# policy crashing on an unguarded ``feasible_ids`` index.
 @register_policy("random")
 class RandomPolicy(Policy):
     """Uniform random feasible device."""
@@ -242,7 +312,22 @@ class RandomPolicy(Policy):
         self.rng = np.random.default_rng(seed)
 
     def decide(self, ctx: PolicyContext) -> TaskDecision:
-        return TaskDecision(devices=(int(self.rng.choice(ctx.feasible_ids)),))
+        ids = ctx.feasible_ids
+        if ids.size == 0:
+            return TaskDecision(devices=())
+        return TaskDecision(devices=(int(self.rng.choice(ids)),))
+
+    def decide_batch(self, batch: BatchedPolicyContext) -> BatchedDecision:
+        # One rng draw per non-empty row, in row order: the draws themselves
+        # must replay the scalar numpy stream, so only the feasibility scan
+        # is vectorised.
+        out = []
+        for b in range(batch.n_rows):
+            ids = batch.feasible_ids(b)
+            out.append(
+                () if ids.size == 0 else (int(self.rng.choice(ids)),)
+            )
+        return BatchedDecision(devices=tuple(out))
 
 
 @register_policy("round_robin")
@@ -254,9 +339,20 @@ class RoundRobinPolicy(Policy):
 
     def decide(self, ctx: PolicyContext) -> TaskDecision:
         ids = ctx.feasible_ids
+        if ids.size == 0:
+            return TaskDecision(devices=())
         did = int(ids[self._next % ids.size])
         self._next += 1
         return TaskDecision(devices=(did,))
+
+    def decide_batch(self, batch: BatchedPolicyContext) -> BatchedDecision:
+        # Cursor semantics under batching: the cursor advances once per
+        # non-empty row, in row order (== looping ``decide``); the gather of
+        # each row's k-th feasible device is one fused kernel call.
+        devices, self._next = round_robin_decide_batch(
+            batch.feasible, self._next
+        )
+        return BatchedDecision(devices=tuple(devices))
 
 
 @register_policy("lavea")
@@ -268,8 +364,18 @@ class LAVEAPolicy(Policy):
 
     def decide(self, ctx: PolicyContext) -> TaskDecision:
         ids = ctx.feasible_ids
+        if ids.size == 0:
+            return TaskDecision(devices=())
         q = ctx.queue_len[ids]
         return TaskDecision(devices=(int(ids[int(np.argmin(q))]),))
+
+    def decide_batch(self, batch: BatchedPolicyContext) -> BatchedDecision:
+        # SQLF is stateless: argmin once per distinct context row, fan out.
+        q_pool = batch.queue_pool[batch.bucket_inv[batch.pool_first]]
+        pool_dec = lavea_decide_batch(q_pool, batch.feasible_pool)
+        return BatchedDecision(devices=tuple(
+            pool_dec[g] for g in batch.row_pool.tolist()
+        ))
 
 
 @register_policy("petrel")
@@ -281,11 +387,32 @@ class PetrelPolicy(Policy):
 
     def decide(self, ctx: PolicyContext) -> TaskDecision:
         ids = ctx.feasible_ids
+        if ids.size == 0:
+            return TaskDecision(devices=())
         if ids.size == 1:
             return TaskDecision(devices=(int(ids[0]),))
         a, b = self.rng.choice(ids, size=2, replace=False)
         pick = a if ctx.exec_lat[a] <= ctx.exec_lat[b] else b
         return TaskDecision(devices=(int(pick),))
+
+    def decide_batch(self, batch: BatchedPolicyContext) -> BatchedDecision:
+        # Two-sample draws replay the scalar stream row by row (rows with
+        # zero/one feasible device consume no randomness, like ``decide``).
+        out = []
+        exec_pool = batch.exec_pool
+        row_pool = batch.row_pool
+        for b in range(batch.n_rows):
+            ids = batch.feasible_ids(b)
+            if ids.size == 0:
+                out.append(())
+            elif ids.size == 1:
+                out.append((int(ids[0]),))
+            else:
+                a, c = self.rng.choice(ids, size=2, replace=False)
+                g = row_pool[b]
+                pick = a if exec_pool[g, a] <= exec_pool[g, c] else c
+                out.append((int(pick),))
+        return BatchedDecision(devices=tuple(out))
 
 
 @dataclass
@@ -333,6 +460,8 @@ class LaTSPolicy(Policy):
 
     def decide(self, ctx: PolicyContext) -> TaskDecision:
         ids = ctx.feasible_ids
+        if ids.size == 0:
+            return TaskDecision(devices=())
         pred = self.model.predict(ctx.classes[ids], ctx.ttype, ctx.counts[ids])
         # Devices of the same class at saturated CPU usage produce identical
         # predictions; break ties randomly so LaTS spreads within its
@@ -340,3 +469,31 @@ class LaTSPolicy(Policy):
         lo = pred.min()
         ties = np.flatnonzero(pred <= lo * (1.0 + 1e-9))
         return TaskDecision(devices=(int(ids[int(self.rng.choice(ties))]),))
+
+    def decide_batch(self, batch: BatchedPolicyContext) -> BatchedDecision:
+        # The latency model is evaluated once per DISTINCT context row in
+        # one vectorised shot; only the per-row tie-break draw stays
+        # sequential (it must replay the scalar rng stream).
+        model = self.model
+        classes = batch.classes
+        counts_g = batch.counts_pool[batch.bucket_inv[batch.pool_first]]
+        tt_g = batch.ttypes[batch.pool_first]               # (G,)
+        usage = np.minimum(
+            (model.cpu_usage[classes][None, :, :] * counts_g).sum(axis=2),
+            model.usage_cap,
+        )                                                   # (G, D)
+        pred = model.base[classes[None, :], tt_g[:, None]] * np.exp(
+            model.b[classes][None, :] * usage
+        )                                                   # (G, D)
+        row_pool = batch.row_pool
+        out = []
+        for b in range(batch.n_rows):
+            ids = batch.feasible_ids(b)
+            if ids.size == 0:
+                out.append(())
+                continue
+            pred_sub = pred[row_pool[b], ids]
+            lo = pred_sub.min()
+            ties = np.flatnonzero(pred_sub <= lo * (1.0 + 1e-9))
+            out.append((int(ids[int(self.rng.choice(ties))]),))
+        return BatchedDecision(devices=tuple(out))

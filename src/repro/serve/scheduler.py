@@ -135,14 +135,18 @@ class ServingFleet:
         long_frac: float = 0.3,
         arrival_window: float = 20.0,
         seed: int = 1,
+        fused: bool = False,
     ) -> SimResult:
+        """Serve a request stream.  ``fused=True`` admission-plans the whole
+        wave with one batched ``decide_batch`` call per stage (prefill wave,
+        then decode wave) — the bulk-admission mode for traffic spikes."""
         rng = np.random.default_rng(seed)
         apps, times = [], []
         for i in range(n_requests):
             rc = LONG if rng.random() < long_frac else SHORT
             apps.append(make_request_dag(f"#{i}", rc))
             times.append(float(rng.uniform(0.0, arrival_window)))
-        self.orchestrator.submit_batch(apps, sorted(times))
+        self.orchestrator.submit_batch(apps, sorted(times), fused=fused)
         self.orchestrator.step(until=self.horizon)
         return self.orchestrator.result(scenario="serving", horizon=self.horizon)
 

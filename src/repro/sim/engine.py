@@ -139,9 +139,19 @@ class Engine:
     def _push(self, t: float, kind: int, payload: tuple) -> None:
         heapq.heappush(self.events, (t, next(self._seq), kind, payload))
 
-    def add_arrivals(self, apps: List[AppDAG], times: List[float]) -> None:
-        for app, t in zip(apps, times):
-            self._push(t, self.ARRIVAL, (app,))
+    def add_arrivals(
+        self,
+        apps: List[AppDAG],
+        times: List[float],
+        plans: Optional[List] = None,
+    ) -> None:
+        """Enqueue arrivals.  ``plans`` (from ``orchestrate_batch``) carries
+        pre-computed placements for the fused burst path; without it each
+        arrival is planned when its event fires."""
+        if plans is None:
+            plans = [None] * len(apps)
+        for app, t, plan in zip(apps, times, plans):
+            self._push(t, self.ARRIVAL, (app, plan))
 
     # -- task lifecycle -----------------------------------------------------------
     def _start_stage(self, run: _AppRun) -> None:
@@ -212,10 +222,12 @@ class Engine:
             t, _, kind, payload = heapq.heappop(self.events)
             self.now = t
             if kind == self.ARRIVAL:
-                (app,) = payload
-                # Two-phase protocol: pure planning, then the one blessed
-                # mutation path (records T_alloc intervals + model uploads).
-                plan = orchestrate(app, self.cluster, t, self.policy)
+                app, plan = payload
+                # Two-phase protocol: pure planning (unless the arrival came
+                # pre-planned by a fused `orchestrate_batch` wave), then the
+                # one blessed mutation path (T_alloc intervals + uploads).
+                if plan is None:
+                    plan = orchestrate(app, self.cluster, t, self.policy)
                 self.cluster.apply(plan)
                 placement = plan.placement
                 rec = InstanceRecord(

@@ -53,6 +53,9 @@ class SimConfig:
     alpha: float = 0.5
     beta: float = 0.1
     gamma: int = 3
+    # Plan each cycle's burst in one fused `orchestrate_batch` wave (all
+    # plans share the cycle-start fleet snapshot) instead of per arrival.
+    fused_burst: bool = False
 
     @property
     def horizon(self) -> float:
@@ -114,7 +117,20 @@ def run_one(
         seed=cfg.seed, noise_sigma=cfg.noise_sigma,
     )
     apps, times = _make_workload(cfg)
-    orch.submit_batch(apps, times)
+    if cfg.fused_burst:
+        # One fused wave per cycle: advance the clock to each cycle start,
+        # then plan that cycle's burst against the fleet state at that
+        # instant (running tasks from earlier cycles included).
+        per = cfg.instances_per_cycle
+        for c in range(cfg.n_cycles):
+            orch.step(until=c * cfg.cycle_len)
+            orch.submit_batch(
+                apps[c * per:(c + 1) * per],
+                times[c * per:(c + 1) * per],
+                fused=True,
+            )
+    else:
+        orch.submit_batch(apps, times)
     orch.step(until=cfg.horizon + 25.0)
     return orch.result(scenario=cfg.scenario, horizon=cfg.horizon)
 
