@@ -11,11 +11,14 @@ Plans B application instances arriving simultaneously on the paper's
     wave-stage.
 
 Both paths are pure planning against the same snapshot and are bit-identical
-(asserted here on every run).  Writes ``BENCH_place.json`` with
-placements/sec at B ∈ {1, 64, 1000}; ``--check BASELINE.json`` exits
-non-zero on a >2x regression of the batched-vs-scalar speedup ratio against
-the committed baseline (used by CI; the ratio is gated rather than absolute
-throughput so the check is portable across runner hardware).
+(asserted here on every run).  A second section runs the asymmetric 3-tier
+``multi_tier`` fleet with the ``tier_escalation`` policy, so the report also
+records placement throughput under the tier-aware (D, D) link-matrix cost
+model.  Writes ``BENCH_place.json`` with placements/sec at
+B ∈ {1, 64, 1000}; ``--check BASELINE.json`` exits non-zero on a >2x
+regression of the batched-vs-scalar speedup ratio against the committed
+baseline (used by CI; the ratio is gated rather than absolute throughput so
+the check is portable across runner hardware).
 
     PYTHONPATH=src python -m benchmarks.bench_place \
         [--out BENCH_place.json] [--check benchmarks/BENCH_place.baseline.json]
@@ -56,15 +59,22 @@ def _same_plans(plans_a, plans_b) -> None:
             assert [r.did for r in tp.replicas] == [r.did for r in other.replicas]
 
 
-def measure(scheme: str = "ibdash", n_devices: int = 100, seed: int = 0):
+def measure(
+    scheme: str = "ibdash",
+    n_devices: int = 100,
+    seed: int = 0,
+    scenario: str = "mix",
+    latency_budget: float = float("inf"),
+):
     from repro.api import orchestrate, orchestrate_batch
     from repro.sim import SimConfig, make_cluster, make_profile
     from repro.sim.runner import policy_for
 
-    cfg = SimConfig(seed=seed)
+    cfg = SimConfig(seed=seed, latency_budget=latency_budget)
     profile = make_profile(seed=seed)
     cluster = make_cluster(
-        profile, scenario="mix", n_devices=n_devices, seed=seed, horizon=400.0
+        profile, scenario=scenario, n_devices=n_devices, seed=seed,
+        horizon=400.0,
     )
     results = {}
     for B in BATCH_SIZES:
@@ -99,14 +109,43 @@ def measure(scheme: str = "ibdash", n_devices: int = 100, seed: int = 0):
         }
     return {
         "scheme": scheme,
+        "scenario": scenario,
         "n_devices": n_devices,
         "n_tasks_per_instance": float(np.mean([a.n_tasks for a in _workload(64)])),
         "results": results,
     }
 
 
+def full_report() -> dict:
+    """The paper's mix fleet with IBDASH, plus the multi-tier fleet (the
+    tier-aware (D, D) link-matrix cost path) with tier_escalation."""
+    report = measure()
+    report["multi_tier"] = measure(
+        scheme="tier_escalation", scenario="multi_tier", latency_budget=4.0
+    )
+    return report
+
+
+def _check_section(results: dict, base_results: dict, label: str) -> list:
+    failures = []
+    for B, row in base_results.items():
+        got = results.get(B)
+        if got is None:
+            failures.append(f"{label} B={B}: missing from report")
+            continue
+        floor = row["speedup"] / REGRESSION_FACTOR
+        if got["speedup"] < floor:
+            failures.append(
+                f"{label} B={B}: batched/scalar speedup {got['speedup']:.2f}x "
+                f"< {floor:.2f}x (baseline {row['speedup']:.2f}x / "
+                f"{REGRESSION_FACTOR})"
+            )
+    return failures
+
+
 def check(report: dict, baseline_path: str) -> int:
-    """Fail on a >2x regression of the batched-vs-scalar SPEEDUP ratio.
+    """Fail on a >2x regression of the batched-vs-scalar SPEEDUP ratio, for
+    the mix fleet and (when the baseline records it) the multi-tier fleet.
 
     The gate compares the ratio, not absolute placements/sec: both paths
     run on the same machine in the same job, so the ratio is portable
@@ -114,19 +153,13 @@ def check(report: dict, baseline_path: str) -> int:
     """
     with open(baseline_path) as f:
         baseline = json.load(f)
-    failures = []
-    for B, row in baseline["results"].items():
-        got = report["results"].get(B)
-        if got is None:
-            failures.append(f"B={B}: missing from report")
-            continue
-        floor = row["speedup"] / REGRESSION_FACTOR
-        if got["speedup"] < floor:
-            failures.append(
-                f"B={B}: batched/scalar speedup {got['speedup']:.2f}x < "
-                f"{floor:.2f}x (baseline {row['speedup']:.2f}x / "
-                f"{REGRESSION_FACTOR})"
-            )
+    failures = _check_section(report["results"], baseline["results"], "mix")
+    if "multi_tier" in baseline:
+        failures += _check_section(
+            report.get("multi_tier", {}).get("results", {}),
+            baseline["multi_tier"]["results"],
+            "multi_tier",
+        )
     for msg in failures:
         print(f"REGRESSION {msg}", file=sys.stderr)
     return 1 if failures else 0
@@ -134,11 +167,14 @@ def check(report: dict, baseline_path: str) -> int:
 
 def run(ctx) -> None:
     """benchmarks.run entry point: emit CSV rows + write BENCH_place.json."""
-    report = measure()
+    report = full_report()
     for B, row in report["results"].items():
         ctx.emit(f"place_scalar_pps_B{B}", row["scalar_pps"])
         ctx.emit(f"place_batched_pps_B{B}", row["batched_pps"])
         ctx.emit(f"place_speedup_B{B}", row["speedup"])
+    for B, row in report["multi_tier"]["results"].items():
+        ctx.emit(f"place_mt_batched_pps_B{B}", row["batched_pps"])
+        ctx.emit(f"place_mt_speedup_B{B}", row["speedup"])
     with open("BENCH_place.json", "w") as f:
         json.dump(report, f, indent=2)
 
@@ -149,13 +185,16 @@ def main() -> None:
     ap.add_argument("--check", default=None,
                     help="baseline json; exit 1 on >2x throughput regression")
     args = ap.parse_args()
-    report = measure()
+    report = full_report()
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
-    for B, row in report["results"].items():
-        print(f"B={B:>5s}  scalar {row['scalar_pps']:10.1f} pl/s  "
-              f"batched {row['batched_pps']:10.1f} pl/s  "
-              f"speedup {row['speedup']:6.2f}x")
+    for label, section in (("mix/ibdash", report),
+                           ("multi_tier/tier_escalation", report["multi_tier"])):
+        for B, row in section["results"].items():
+            print(f"{label:26s} B={B:>5s}  "
+                  f"scalar {row['scalar_pps']:10.1f} pl/s  "
+                  f"batched {row['batched_pps']:10.1f} pl/s  "
+                  f"speedup {row['speedup']:6.2f}x")
     if args.check:
         sys.exit(check(report, args.check))
 

@@ -37,7 +37,15 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence, Union
 
-from .core.cluster import ApplyToken, ClusterState, Device
+from .core.cluster import (
+    TIER_CLOUD,
+    TIER_DEVICE,
+    TIER_EDGE_SERVER,
+    TIER_NAMES,
+    ApplyToken,
+    ClusterState,
+    Device,
+)
 from .core.dag import AppDAG, TaskSpec
 from .core.interference import InterferenceModel
 from .core.batched import BatchedDecision, BatchedPolicyContext, FleetSnapshot
@@ -81,6 +89,10 @@ __all__ = [
     "ApplyToken",
     "ClusterState",
     "Device",
+    "TIER_DEVICE",
+    "TIER_EDGE_SERVER",
+    "TIER_CLOUD",
+    "TIER_NAMES",
     "InterferenceModel",
     "AppDAG",
     "TaskSpec",
@@ -88,7 +100,8 @@ __all__ = [
     "InstanceRecord",
     "SimResult",
     # lazily re-exported (see __getattr__): run_one, run_grid, sweep_alpha,
-    # sweep_gamma, SimConfig, make_profile, make_cluster, ServingFleet
+    # sweep_gamma, SimConfig, make_profile, make_cluster,
+    # make_multi_tier_cluster, ServingFleet
 ]
 
 
@@ -207,6 +220,7 @@ _LAZY = {
     "SimConfig": ("repro.sim.runner", "SimConfig"),
     "make_profile": ("repro.sim.profiles", "make_profile"),
     "make_cluster": ("repro.sim.profiles", "make_cluster"),
+    "make_multi_tier_cluster": ("repro.sim.profiles", "make_multi_tier_cluster"),
     "EdgeProfile": ("repro.sim.profiles", "EdgeProfile"),
     "ServingFleet": ("repro.serve.scheduler", "ServingFleet"),
 }

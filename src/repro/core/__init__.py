@@ -21,7 +21,15 @@ from .availability import (
     young_daly_interval,
 )
 from .baselines import LAVEA, LaTS, LaTSModel, Petrel, RandomScheduler, RoundRobinScheduler
-from .cluster import ApplyToken, ClusterState, Device
+from .cluster import (
+    TIER_CLOUD,
+    TIER_DEVICE,
+    TIER_EDGE_SERVER,
+    TIER_NAMES,
+    ApplyToken,
+    ClusterState,
+    Device,
+)
 from .dag import AppDAG, TaskSpec, app_stage, topological_order, validate_dag
 from .interference import InterferenceModel, fit_linear_interference
 from .orchestrator import (
@@ -44,6 +52,7 @@ from .policy import (
     RandomPolicy,
     RoundRobinPolicy,
     TaskDecision,
+    TierEscalationPolicy,
     available_policies,
     make_policy,
     register_policy,
@@ -60,6 +69,10 @@ __all__ = [
     "ApplyToken",
     "ClusterState",
     "Device",
+    "TIER_DEVICE",
+    "TIER_EDGE_SERVER",
+    "TIER_CLOUD",
+    "TIER_NAMES",
     "IBDASH",
     "IBDASHConfig",
     "Placement",
@@ -80,6 +93,7 @@ __all__ = [
     "LAVEAPolicy",
     "PetrelPolicy",
     "LaTSPolicy",
+    "TierEscalationPolicy",
     "RandomScheduler",
     "RoundRobinScheduler",
     "LAVEA",

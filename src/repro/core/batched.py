@@ -48,6 +48,7 @@ __all__ = [
     "ibdash_decide_batch",
     "lavea_decide_batch",
     "round_robin_decide_batch",
+    "tier_escalation_decide_batch",
 ]
 
 # Below this many rows the fixed jit-dispatch cost exceeds the fused-kernel
@@ -72,7 +73,9 @@ class FleetSnapshot:
     t: float                 # absolute time of the snapshot
     classes: np.ndarray      # (D,) device-class ids
     lams: np.ndarray         # (D,) failure rates (Table IV)
-    bandwidths: np.ndarray   # (D,) link bandwidth B in bytes/s
+    bandwidths: np.ndarray   # (D,) DEPRECATED scalar bandwidths (see link_bw)
+    tiers: np.ndarray        # (D,) fleet tier ids (device/edge_server/cloud)
+    link_bw: np.ndarray      # (D, D) bw_eff[s, d] = min(up[s], down[d], backhaul)
     mem_total: np.ndarray    # (D,) H(ED) in bytes (memory-feasibility data)
     join_times: np.ndarray   # (D,) device join times
     counts: np.ndarray       # (D, N) Task_info at t
@@ -211,6 +214,14 @@ class BatchedPolicyContext:
         return self.fleet.bandwidths
 
     @property
+    def tiers(self) -> np.ndarray:
+        return self.fleet.tiers
+
+    @property
+    def link_bw(self) -> np.ndarray:
+        return self.fleet.link_bw
+
+    @property
     def mem_total(self) -> np.ndarray:
         return self.fleet.mem_total
 
@@ -269,6 +280,7 @@ class BatchedPolicyContext:
             queue_len=self.queue_pool[gc],
             counts=self.counts_pool[gc],
             classes=self.fleet.classes,
+            tiers=self.fleet.tiers,
         )
 
 
@@ -391,12 +403,35 @@ def _jax():
         match = feasible & (pos == targets[:, None])
         return jnp.argmax(match, axis=1)
 
+    def tier_escalation_kernel(total, feasible, tiers, budget, n_tiers):
+        """Tier escalation for all B rows: per level L (device -> edge ->
+        cloud) take the masked argmin over feasible devices at tiers <= L,
+        accept the first level whose best candidate meets the latency
+        budget, fall back to the global feasible argmin.  ``n_tiers`` is
+        static so the tiny level loop unrolls."""
+        B = total.shape[0]
+        rows = jnp.arange(B)
+        picked = jnp.zeros(B, jnp.int64)
+        chosen = jnp.zeros(B, bool)
+        for lv in range(n_tiers):
+            masked = jnp.where(feasible & (tiers[None, :] <= lv), total, jnp.inf)
+            best = jnp.argmin(masked, axis=1)
+            best_val = masked[rows, best]
+            take = ~chosen & jnp.isfinite(best_val) & (best_val <= budget)
+            picked = jnp.where(take, best, picked)
+            chosen = chosen | take
+        gbest = jnp.argmin(jnp.where(feasible, total, jnp.inf), axis=1)
+        return jnp.where(chosen, picked, gbest)
+
     _JAX_STATE.update(
         jnp=jnp,
         enable_x64=enable_x64,
         ibdash_scan_kernel=jax.jit(ibdash_scan_kernel),
         lavea_kernel=jax.jit(lavea_kernel),
         round_robin_kernel=jax.jit(round_robin_kernel),
+        tier_escalation_kernel=jax.jit(
+            tier_escalation_kernel, static_argnums=(4,)
+        ),
     )
     return _JAX_STATE
 
@@ -519,6 +554,51 @@ def lavea_decide_batch(
         (int(picked[b]),) if n_feas[b] > 0 else ()
         for b in range(queue_len.shape[0])
     ]
+
+
+def tier_escalation_decide_batch(
+    total: np.ndarray,
+    feasible: np.ndarray,
+    tiers: np.ndarray,
+    budget: float,
+) -> List[Tuple[int, ...]]:
+    """Fused tier-escalation rule for B tasks.
+
+    For each row, widen the candidate set one tier level at a time (devices
+    first, then edge servers, then cloud) and place on the min-``total``
+    candidate of the first level whose best option meets ``budget``; if even
+    the whole fleet misses the budget, place on the global feasible best.
+    Bit-identical to looping the scalar rule (same float64 masked argmins,
+    first-minimum tie-break)."""
+    B, D = total.shape
+    n_feas = feasible.sum(axis=1)
+    n_tiers = int(tiers.max()) + 1 if tiers.size else 1
+    if HAVE_JAX and B >= BATCH_KERNEL_MIN_ROWS:
+        st = _jax()
+        n_pad = _padded(B) - B
+        with st["enable_x64"]():
+            picked = st["tier_escalation_kernel"](
+                _pad_rows(np.asarray(total, np.float64), n_pad, 1.0),
+                _pad_rows(np.asarray(feasible, bool), n_pad, False),
+                np.asarray(tiers, np.int64),
+                float(budget),
+                n_tiers,
+            )
+        picked = np.asarray(picked)[:B]
+    else:
+        rows = np.arange(B)
+        picked = np.zeros(B, np.int64)
+        chosen = np.zeros(B, bool)
+        for lv in range(n_tiers):
+            masked = np.where(feasible & (tiers[None, :] <= lv), total, np.inf)
+            best = np.argmin(masked, axis=1)
+            best_val = masked[rows, best]
+            take = ~chosen & np.isfinite(best_val) & (best_val <= budget)
+            picked = np.where(take, best, picked)
+            chosen |= take
+        gbest = np.argmin(np.where(feasible, total, np.inf), axis=1)
+        picked = np.where(chosen, picked, gbest)
+    return [(int(picked[b]),) if n_feas[b] > 0 else () for b in range(B)]
 
 
 def round_robin_decide_batch(

@@ -29,7 +29,20 @@ import numpy as np
 from .batched import FleetSnapshot
 from .interference import InterferenceModel
 
-__all__ = ["Device", "ClusterState", "ApplyToken"]
+__all__ = [
+    "Device",
+    "ClusterState",
+    "ApplyToken",
+    "TIER_DEVICE",
+    "TIER_EDGE_SERVER",
+    "TIER_CLOUD",
+    "TIER_NAMES",
+]
+
+# Fleet tiers (the multi-tier DAG-scheduling extension of arXiv:2409.10839):
+# end devices -> edge servers -> cloud.  Tier ids index the backhaul matrix.
+TIER_DEVICE, TIER_EDGE_SERVER, TIER_CLOUD = 0, 1, 2
+TIER_NAMES = ("device", "edge_server", "cloud")
 
 
 @dataclass
@@ -40,15 +53,35 @@ class Device:
     cls: int                      # index into the device-class/profile table
     mem_total: float              # H(ED) in bytes
     lam: float                    # failure rate lambda (Table IV)
-    bandwidth: float              # link bandwidth B in bytes/s
+    # DEPRECATED scalar link bandwidth in bytes/s.  Kept as a symmetric shim:
+    # when ``up_bw``/``down_bw`` are not given they both default to it, so
+    # existing profiles load unchanged.  New code should set the directional
+    # rates (phone uplinks are much slower than their downlinks).
+    bandwidth: Optional[float] = None
     join_time: float = 0.0
     alive_until: float = float("inf")  # sampled ground-truth lifetime (sim only)
+    tier: int = TIER_DEVICE       # fleet tier (indexes the backhaul matrix)
+    up_bw: Optional[float] = None    # uplink rate in bytes/s (device -> net)
+    down_bw: Optional[float] = None  # downlink rate in bytes/s (net -> device)
 
     # dynamic state ------------------------------------------------------------
     mem_free: float = 0.0
     # model_id -> bytes; least-recently-used first (we evict from the front;
     # the paper keeps MRU at the front and evicts from the end — same policy).
     model_cache: "OrderedDict[str, float]" = field(default_factory=OrderedDict)
+
+    def __post_init__(self) -> None:
+        if self.bandwidth is None and (self.up_bw is None or self.down_bw is None):
+            raise ValueError(
+                "Device needs either the deprecated scalar `bandwidth` or "
+                "both `up_bw` and `down_bw`"
+            )
+        if self.up_bw is None:
+            self.up_bw = float(self.bandwidth)
+        if self.down_bw is None:
+            self.down_bw = float(self.bandwidth)
+        if self.bandwidth is None:
+            self.bandwidth = float(min(self.up_bw, self.down_bw))
 
     def init_dynamic(self) -> None:
         self.mem_free = self.mem_total
@@ -113,16 +146,19 @@ class ClusterState:
     model: InterferenceModel
     horizon: float = 300.0        # total simulated time covered by T_alloc
     dt: float = 0.05              # T_alloc bucket width (seconds)
+    # (T, T) inter-tier backhaul rates in bytes/s (T = number of tiers);
+    # None = unconstrained (single-tier fleets).
+    backhaul: Optional[np.ndarray] = None
+    # Device id hosting the model artifacts (an edge server / registry node):
+    # uploads to device d are charged over the bw_eff[model_source, d] link.
+    # None = legacy semantics (artifacts arrive at each device's downlink).
+    model_source: Optional[int] = None
 
     def __post_init__(self) -> None:
         for d in self.devices:
             d.init_dynamic()
-        self._classes = np.array([d.cls for d in self.devices], dtype=np.int64)
-        self._lams = np.array([d.lam for d in self.devices], dtype=np.float64)
-        self._bw = np.array([d.bandwidth for d in self.devices], dtype=np.float64)
-        self._mem_total = np.array(
-            [d.mem_total for d in self.devices], dtype=np.float64
-        )
+        self.topology_version = -1
+        self.refresh_topology()
         self.n_buckets = int(np.ceil(self.horizon / self.dt)) + 1
         # T_alloc: (devices, task types, time buckets)
         self.alloc = np.zeros(
@@ -130,6 +166,64 @@ class ClusterState:
             dtype=np.float32,
         )
         self._horizon_warned = False
+
+    def refresh_topology(self) -> None:
+        """(Re)build the static fleet vectors and the ``(D, D)`` effective
+        link-bandwidth matrix from the current ``Device`` attributes, and
+        bump ``topology_version`` so snapshot-scoped caches (the wave
+        context builder) can detect staleness.
+
+        The bottleneck rule prices the *link*, not the endpoint:
+
+            bw_eff[s, d] = min(up[s], down[d], backhaul[tier[s], tier[d]])
+
+        — the sender's uplink, the receiver's downlink, and the inter-tier
+        backhaul all bound a transfer.  The diagonal is +inf (a co-located
+        transfer crosses no network hop).  Call this after mutating device
+        link rates or tiers mid-run (or use :meth:`set_bandwidth`)."""
+        devs = self.devices
+        self._classes = np.array([d.cls for d in devs], dtype=np.int64)
+        self._lams = np.array([d.lam for d in devs], dtype=np.float64)
+        self._bw = np.array([d.bandwidth for d in devs], dtype=np.float64)
+        self._mem_total = np.array([d.mem_total for d in devs], dtype=np.float64)
+        self._tiers = np.array([d.tier for d in devs], dtype=np.int64)
+        self._up = np.array([d.up_bw for d in devs], dtype=np.float64)
+        self._down = np.array([d.down_bw for d in devs], dtype=np.float64)
+        link = np.minimum(self._up[:, None], self._down[None, :])
+        if self.backhaul is not None:
+            bh = np.asarray(self.backhaul, dtype=np.float64)
+            if self._tiers.size and (
+                bh.ndim != 2 or min(bh.shape) <= int(self._tiers.max())
+            ):
+                raise ValueError(
+                    f"backhaul matrix {bh.shape} too small for tier "
+                    f"{int(self._tiers.max())}"
+                )
+            link = np.minimum(link, bh[self._tiers[:, None], self._tiers[None, :]])
+        np.fill_diagonal(link, np.inf)
+        self._link = link
+        self.topology_version += 1
+
+    def set_bandwidth(
+        self,
+        did: int,
+        *,
+        up: Optional[float] = None,
+        down: Optional[float] = None,
+        tier: Optional[int] = None,
+    ) -> None:
+        """Update one device's link rates / tier and rebuild the link matrix
+        (the blessed way to change topology between planning waves)."""
+        d = self.devices[did]
+        if up is not None:
+            d.up_bw = float(up)
+        if down is not None:
+            d.down_bw = float(down)
+        if tier is not None:
+            d.tier = int(tier)
+        if up is not None or down is not None:
+            d.bandwidth = float(min(d.up_bw, d.down_bw))
+        self.refresh_topology()
 
     # -- static fleet views ------------------------------------------------------
     @property
@@ -147,7 +241,32 @@ class ClusterState:
         return self._lams
 
     def bandwidths(self) -> np.ndarray:
+        """DEPRECATED (D,) scalar bandwidths — use :meth:`link_bw`."""
         return self._bw
+
+    def tiers(self) -> np.ndarray:
+        return self._tiers
+
+    def up_bandwidths(self) -> np.ndarray:
+        return self._up
+
+    def down_bandwidths(self) -> np.ndarray:
+        return self._down
+
+    def link_bw(self) -> np.ndarray:
+        """(D, D) effective link bandwidth: ``bw_eff[s, d] = min(up[s],
+        down[d], backhaul[tier[s], tier[d]])``, +inf on the diagonal."""
+        return self._link
+
+    def upload_bw(self) -> np.ndarray:
+        """(D,) effective model-upload bandwidth per device: the row of the
+        link matrix from ``model_source`` (artifacts live on that node) or,
+        when no source is declared, each device's downlink — which equals
+        the deprecated scalar ``bandwidth`` on shimmed fleets, preserving
+        the legacy upload pricing exactly."""
+        if self.model_source is None:
+            return self._down
+        return self._link[self.model_source]
 
     def mem_totals(self) -> np.ndarray:
         return self._mem_total
@@ -238,6 +357,8 @@ class ClusterState:
             classes=self._classes,
             lams=self._lams,
             bandwidths=self._bw,
+            tiers=self._tiers,
+            link_bw=self._link,
             mem_total=self._mem_total,
             join_times=join_times,
             counts=counts,

@@ -198,24 +198,27 @@ class _WaveContextBuilder:
 
     def __init__(self, cluster: ClusterState):
         self.cluster = cluster
-        self.bw = cluster.bandwidths()
+        self.link = cluster.link_bw()        # (D, D) tier-aware bw_eff matrix
+        self.upload_bw = cluster.upload_bw() # (D,) artifact-path bandwidth
         self.lams = cluster.lams()
         self.mem_total = cluster.mem_totals()
         self.classes = cluster.classes()
         self.join = np.array([d.join_time for d in cluster.devices])
         self.n_dev = cluster.n_devices
-        # Wave-level caches (planning is pure: cluster state cannot change
-        # under us, so cached snapshots stay valid for the whole wave).
+        # Wave-level caches, scoped to ONE snapshot (planning is pure:
+        # cluster state cannot change under us, so cached vectors stay valid
+        # for the whole wave; `_topo_version` makes any violation loud).
         # Time-dependent entries are keyed by T_alloc BUCKET, not by exact
         # time — `counts_at` only reads the bucket, so this is exact and
         # collapses the ~B distinct per-app stage offsets of a big wave onto
         # a handful of shared snapshots.
+        self._topo_version = cluster.topology_version
         self._counts: Dict[int, np.ndarray] = {}
         self._queue: Dict[int, np.ndarray] = {}
         self._exec: Dict[Tuple[int, int], np.ndarray] = {}
         self._missing: Dict[str, np.ndarray] = {}
         self._upload: Dict[Tuple[str, float], np.ndarray] = {}
-        self._transfer: Dict[float, np.ndarray] = {}
+        self._transfer: Dict[Tuple[float, int], np.ndarray] = {}
         self._feasible: Dict[float, np.ndarray] = {}
         self._feasible_any: Dict[float, bool] = {}
 
@@ -249,22 +252,30 @@ class _WaveContextBuilder:
 
     def upload_row(self, model_id: str, model_bytes: float) -> np.ndarray:
         """(D,) model-upload latency vector (lines 7-10), cached per
-        (model, size) — tasks may disagree on a shared artifact's size."""
+        (model, size) — tasks may disagree on a shared artifact's size.
+        Uploads travel the device <-> artifact-server link (the
+        ``model_source`` row of the link matrix; each device's downlink on
+        legacy fleets without one)."""
         key = (model_id, model_bytes)
         u = self._upload.get(key)
         if u is None:
             u = np.where(
-                self.missing_model(model_id), model_bytes / self.bw, 0.0
+                self.missing_model(model_id), model_bytes / self.upload_bw, 0.0
             )
             self._upload[key] = u
         return u
 
-    def transfer_vec(self, out_bytes: float) -> np.ndarray:
-        """(D,) transfer-cost vector for one parent output size."""
-        v = self._transfer.get(out_bytes)
+    def transfer_vec(self, out_bytes: float, src: int) -> np.ndarray:
+        """(D,) transfer-cost row for one parent output moved FROM ``src``:
+        ``out_bytes / bw_eff[src, d]`` — the sender's uplink, the receiver's
+        downlink, and the tier backhaul all bound the link (Eq. 2's
+        ``L(T_i)_d`` priced on the actual path, not the endpoint).  The
+        matrix diagonal is +inf, so staying on ``src`` costs exactly 0."""
+        key = (out_bytes, src)
+        v = self._transfer.get(key)
         if v is None:
-            v = out_bytes / self.bw
-            self._transfer[out_bytes] = v
+            v = out_bytes / self.link[src]
+            self._transfer[key] = v
         return v
 
     def fleet(self, t: float) -> FleetSnapshot:
@@ -306,6 +317,12 @@ class _WaveContextBuilder:
         per-row ``(B, D)`` views materialise lazily only if a policy needs
         them.
         """
+        if self.cluster.topology_version != self._topo_version:
+            raise RuntimeError(
+                "cluster topology changed under a live wave builder; the "
+                "builder's caches are scoped to one snapshot — plan the next "
+                "wave with a fresh orchestrate/orchestrate_batch call"
+            )
         B, D = len(rows), self.n_dev
         tasks = []
         ttypes = np.empty(B, dtype=np.int64)
@@ -318,7 +335,7 @@ class _WaveContextBuilder:
         exec_keys: Dict[Tuple[int, int], int] = {}
         up_keys: Dict[Tuple[Optional[str], float], int] = {(None, 0.0): 0}
         feas_keys: Dict[float, int] = {}
-        tvec_keys: Dict[float, int] = {}
+        tvec_keys: Dict[Tuple[float, int], int] = {}
         pool_keys: Dict[tuple, int] = {}
         exec_mats: List[np.ndarray] = []
         up_mats: List[np.ndarray] = [np.zeros(D)]
@@ -349,8 +366,9 @@ class _WaveContextBuilder:
             if fi is None:
                 fi = feas_keys[mk] = len(feas_mats)
                 feas_mats.append(self.feasible_row(spec))
-            # lines 11-14: input data transfer from parents' devices.
-            contrib: Tuple[Tuple[int, int], ...] = ()
+            # lines 11-14: input data transfer from parents' devices, each
+            # priced over the sender's row of the link matrix.
+            contrib: Tuple[int, ...] = ()
             if spec.deps:
                 chosen = state.placements
                 acc = []
@@ -359,11 +377,13 @@ class _WaveContextBuilder:
                     if parent is None or not parent.replicas:
                         continue
                     ob = state.app.tasks[dep].out_bytes
-                    vi = tvec_keys.get(ob)
+                    pdid = parent.replicas[0].did
+                    vk = (ob, pdid)
+                    vi = tvec_keys.get(vk)
                     if vi is None:
-                        vi = tvec_keys[ob] = len(tvecs)
-                        tvecs.append(self.transfer_vec(ob))
-                    acc.append((parent.replicas[0].did, vi))
+                        vi = tvec_keys[vk] = len(tvecs)
+                        tvecs.append(self.transfer_vec(ob, pdid))
+                    acc.append(vi)
                 contrib = tuple(acc)
             kk = (ei, ui, fi, contrib, t)
             g = pool_keys.get(kk)
@@ -379,10 +399,10 @@ class _WaveContextBuilder:
         feasible_pool = np.stack([feas_mats[s[2]] for s in pool_specs])
         transfer_pool = np.zeros((G, D))
         for g, (_ei, _ui, _fi, contrib, _t) in enumerate(pool_specs):
-            for pdid, vi in contrib:
-                add = tvecs[vi].copy()
-                add[pdid] = 0.0
-                transfer_pool[g] += add
+            for vi in contrib:
+                # the link-matrix diagonal is +inf, so the sender's own
+                # entry is already an exact 0.0 — no copy-and-zero needed
+                transfer_pool[g] += tvecs[vi]
 
         total_pool = exec_pool + upload_pool + transfer_pool    # line 15
 
@@ -599,31 +619,57 @@ class Scheduler:
     def place(self, app: AppDAG, cluster: ClusterState, now: float) -> Placement:
         return self.plan(app, cluster, now).placement
 
-    # -- legacy helpers (unchanged semantics, still pure) -----------------------
+    # -- legacy helpers (now routed through the link matrix) --------------------
     @staticmethod
     def transfer_latency(
         app: AppDAG, task: str, did: int, chosen: Dict[str, TaskPlacement],
-        bandwidth: float,
+        link,
     ) -> float:
-        """L(T_i)_d: move each parent's output from its primary device."""
+        """L(T_i)_d: move each parent's output from its primary device.
+
+        Pass the :class:`ClusterState` as ``link`` to price each hop over
+        the tier-aware ``(D, D)`` matrix — bit-for-bit what the policy path
+        charges, asymmetric fleets included.  A scalar bandwidth is still
+        accepted for the pre-matrix receiver-only pricing (deprecated; it
+        ignores the sender's uplink)."""
+        if isinstance(link, ClusterState):
+            row_of = link.link_bw()
+            total = 0.0
+            for dep in app.tasks[task].deps:
+                parent = chosen.get(dep)
+                if parent is None:
+                    continue
+                if parent.replicas and parent.replicas[0].did != did:
+                    total += (
+                        app.tasks[dep].out_bytes
+                        / row_of[parent.replicas[0].did, did]
+                    )
+            return total
         total = 0.0
         for dep in app.tasks[task].deps:
             parent = chosen.get(dep)
             if parent is None:
                 continue
             if parent.replicas and parent.replicas[0].did != did:
-                total += app.tasks[dep].out_bytes / bandwidth
+                total += app.tasks[dep].out_bytes / link
         return total
 
     @staticmethod
     def upload_latency(
-        app: AppDAG, task: str, device, bandwidth: float
+        app: AppDAG, task: str, device, link
     ) -> float:
-        """L(M(T_i)): model upload when the artifact is not cached."""
+        """L(M(T_i)): model upload when the artifact is not cached.
+
+        Pass the :class:`ClusterState` as ``link`` to charge the upload over
+        the device <-> artifact-server link (``ClusterState.upload_bw``),
+        matching the policy path exactly; a scalar bandwidth keeps the
+        deprecated behaviour."""
         spec = app.tasks[task]
         if spec.model_id is None or device.has_model(spec.model_id):
             return 0.0
-        return spec.model_bytes / bandwidth
+        if isinstance(link, ClusterState):
+            return spec.model_bytes / link.upload_bw()[device.did]
+        return spec.model_bytes / link
 
     @staticmethod
     def commit(

@@ -45,6 +45,7 @@ from .batched import (
     ibdash_decide_batch,
     lavea_decide_batch,
     round_robin_decide_batch,
+    tier_escalation_decide_batch,
 )
 
 __all__ = [
@@ -65,6 +66,7 @@ __all__ = [
     "PetrelPolicy",
     "LaTSModel",
     "LaTSPolicy",
+    "TierEscalationPolicy",
 ]
 
 
@@ -95,6 +97,9 @@ class PolicyContext:
     queue_len: np.ndarray        # (D,) total running tasks (LAVEA's SQLF signal)
     counts: np.ndarray           # (D, N) per-type running-task counts
     classes: np.ndarray          # (D,) device-class ids
+    # (D,) fleet tier ids (0=device, 1=edge server, 2=cloud); None on
+    # contexts built before multi-tier fleets existed == single-tier.
+    tiers: Optional[np.ndarray] = None
 
     @property
     def n_devices(self) -> int:
@@ -497,3 +502,62 @@ class LaTSPolicy(Policy):
             ties = np.flatnonzero(pred_sub <= lo * (1.0 + 1e-9))
             out.append((int(ids[int(self.rng.choice(ties))]),))
         return BatchedDecision(devices=tuple(out))
+
+
+# -- multi-tier fleets (arXiv:2409.10839's device -> edge -> cloud extension) --
+@register_policy("tier_escalation")
+class TierEscalationPolicy(Policy):
+    """Prefer same-tier placement, escalate device -> edge server -> cloud.
+
+    Tasks originate on the end-device tier; the policy places on the
+    min-``total``-latency feasible device of the lowest tier level whose
+    best candidate meets ``latency_budget`` (Eq. 2 latency, which already
+    prices transfers over the tier-aware link matrix).  A tier level is
+    escalated past when it has no memory-feasible device or its best
+    candidate blows the budget; if even the cloud misses the budget, the
+    globally best feasible device wins.  Stateless, so the batched path
+    decides once per distinct context row and fans out."""
+
+    def __init__(self, *, latency_budget: float = float("inf"), **_):
+        self.latency_budget = float(latency_budget)
+
+    def _tiers_of(self, tiers: Optional[np.ndarray], n: int) -> np.ndarray:
+        if tiers is None:
+            return np.zeros(n, dtype=np.int64)
+        return tiers
+
+    def decide(self, ctx: PolicyContext) -> TaskDecision:
+        tiers = self._tiers_of(ctx.tiers, ctx.n_devices)
+        return TaskDecision(
+            devices=self._pick(ctx.total, ctx.feasible, tiers)
+        )
+
+    def decide_batch(self, batch: BatchedPolicyContext) -> BatchedDecision:
+        tiers = self._tiers_of(batch.tiers, batch.n_devices)
+        if batch.n_distinct < BATCH_KERNEL_MIN_ROWS:
+            pool_dec = [
+                self._pick(batch.total_pool[g], batch.feasible_pool[g], tiers)
+                for g in range(batch.n_distinct)
+            ]
+        else:
+            pool_dec = tier_escalation_decide_batch(
+                batch.total_pool, batch.feasible_pool, tiers,
+                self.latency_budget,
+            )
+        return BatchedDecision(devices=tuple(
+            pool_dec[g] for g in batch.row_pool.tolist()
+        ))
+
+    def _pick(
+        self, total: np.ndarray, feasible: np.ndarray, tiers: np.ndarray
+    ) -> Tuple[int, ...]:
+        """The scalar reference rule (the fused kernel's bit-exact twin)."""
+        if not feasible.any():
+            return ()
+        budget = self.latency_budget
+        for lv in range(int(tiers.max()) + 1):
+            masked = np.where(feasible & (tiers <= lv), total, np.inf)
+            best = int(np.argmin(masked))
+            if np.isfinite(masked[best]) and masked[best] <= budget:
+                return (best,)
+        return (int(np.argmin(np.where(feasible, total, np.inf))),)

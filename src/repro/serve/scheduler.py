@@ -86,12 +86,21 @@ class ServingFleet:
         lams: Sequence[float] = (1e-5, 8e-4),      # (reserved, spot)
         hbm_bytes: float = 16e9,
         link_bw: float = 2e9,
+        # Optional placement-domain topology: per-replica tier ids (same pod /
+        # same rack / cross-zone) plus up/down rates and a (T, T) backhaul
+        # matrix — KV-cache migration between stages is then priced over the
+        # pairwise bw_eff[s, d] link instead of a flat fleet-wide rate.
+        tiers: Optional[Sequence[int]] = None,
+        up_bw: Optional[Sequence[float]] = None,
+        down_bw: Optional[Sequence[float]] = None,
+        backhaul: Optional[np.ndarray] = None,
         policy: str = "ibdash",
         alpha: float = 0.5,
         beta: float = 0.1,
         gamma: int = 2,
         seed: int = 0,
         horizon: float = 120.0,
+        latency_budget: float = float("inf"),
     ):
         self.interference = interference
         classes = (
@@ -107,15 +116,20 @@ class ServingFleet:
             devices.append(Device(
                 did=i, cls=cls, mem_total=hbm_bytes, lam=lam,
                 bandwidth=link_bw, alive_until=lifetime,
+                tier=int(tiers[i]) if tiers is not None else 0,
+                up_bw=float(up_bw[i]) if up_bw is not None else None,
+                down_bw=float(down_bw[i]) if down_bw is not None else None,
             ))
         self.cluster = ClusterState(
-            devices=devices, model=interference, horizon=horizon, dt=0.02
+            devices=devices, model=interference, horizon=horizon, dt=0.02,
+            backhaul=backhaul,
         )
         # Every scheme comes out of the policy registry; the online flow is
         # the unified Orchestrator façade (submit -> step -> result).
         self.orchestrator = Orchestrator(
             self.cluster,
-            make_policy(policy, alpha=alpha, beta=beta, gamma=gamma, seed=seed),
+            make_policy(policy, alpha=alpha, beta=beta, gamma=gamma, seed=seed,
+                        latency_budget=latency_budget),
             seed=seed,
         )
         self.horizon = horizon

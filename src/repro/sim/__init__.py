@@ -5,14 +5,20 @@ evaluation: device profiles (Table III/IV), the four DAG applications
 from .apps import APP_BUILDERS, all_apps, lightgbm_app, mapreduce_app, matrix_app, video_app
 from .engine import Engine, InstanceRecord, SimResult
 from .profiles import (
+    DEFAULT_BACKHAUL,
     DEVICE_CLASSES,
+    MULTI_TIER_SPECS,
     SCENARIOS,
     TASK_TYPES,
     EdgeProfile,
+    TierSpec,
     make_cluster,
+    make_multi_tier_cluster,
     make_profile,
 )
 from .runner import (
+    ALL_SCHEME_NAMES,
+    SCHEME_NAMES,
     SimConfig,
     make_scheduler,
     policy_for,
@@ -33,11 +39,17 @@ __all__ = [
     "InstanceRecord",
     "SimResult",
     "DEVICE_CLASSES",
+    "DEFAULT_BACKHAUL",
+    "MULTI_TIER_SPECS",
     "SCENARIOS",
     "TASK_TYPES",
     "EdgeProfile",
+    "TierSpec",
     "make_cluster",
+    "make_multi_tier_cluster",
     "make_profile",
+    "SCHEME_NAMES",
+    "ALL_SCHEME_NAMES",
     "SimConfig",
     "make_scheduler",
     "policy_for",

@@ -96,11 +96,18 @@ class _AppRun:
     rec: InstanceRecord
     app: AppDAG
     placement: Placement
+    # The plan's own timestamp: ``ClusterState.apply`` recorded every
+    # provisional interval at ``plan.now + est_start``, so cancellation MUST
+    # use the same origin.  For fused waves planned against one snapshot,
+    # ``plan.now`` can differ from the arrival event time — cancelling at
+    # ``rec.arrival + est_start`` would leave ghost T_alloc residue.
+    plan_now: float = 0.0
     stage_idx: int = 0
     stage_pending: int = 0
     # task -> #replicas still in flight (None once task resolved)
     inflight: Dict[str, int] = field(default_factory=dict)
     done: Dict[str, bool] = field(default_factory=dict)
+    started: set = field(default_factory=set)
     failed: bool = False
 
 
@@ -173,7 +180,8 @@ class Engine:
         tp = run.placement.tasks[tname]
         spec = run.app.tasks[tname]
         run.inflight[tname] = len(tp.replicas)
-        prov_start = run.rec.arrival + tp.est_start
+        run.started.add(tname)
+        prov_start = run.plan_now + tp.est_start
         for rep in tp.replicas:
             # Replace the provisional T_alloc interval with the actual one.
             cluster.add_interval(
@@ -211,10 +219,28 @@ class Engine:
     def _finish_app(self, run: _AppRun, failed: bool) -> None:
         if not np.isnan(run.rec.finished):
             return
+        if failed:
+            self._cancel_unstarted(run)
         run.failed = failed
         run.rec.failed = failed
         run.rec.finished = self.now
         run.rec.service_time = self.now - run.rec.arrival
+
+    def _cancel_unstarted(self, run: _AppRun) -> None:
+        """A failed app never reaches its later stages: remove their
+        provisional T_alloc intervals (recorded by ``apply`` at
+        ``plan.now + est_start``) so no ghost occupancy survives to corrupt
+        later Eq. (1) estimates."""
+        cluster = self.cluster
+        for tname, tp in run.placement.tasks.items():
+            if tname in run.started:
+                continue
+            spec = run.app.tasks[tname]
+            start = run.plan_now + tp.est_start
+            for rep in tp.replicas:
+                cluster.add_interval(
+                    rep.did, spec.ttype, start, start + rep.est_total, w=-1.0
+                )
 
     # -- main loop -------------------------------------------------------------
     def run(self, until: float) -> None:
@@ -242,7 +268,8 @@ class Engine:
                     rec.finished = t
                     rec.service_time = 0.0
                     continue
-                run = _AppRun(rec=rec, app=app, placement=placement)
+                run = _AppRun(rec=rec, app=app, placement=placement,
+                              plan_now=plan.now)
                 self._start_stage(run)
             else:
                 run, tname, ok = payload

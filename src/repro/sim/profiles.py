@@ -26,7 +26,13 @@ import numpy as np
 
 from ..core.availability import LAMBDA_CED, LAMBDA_MIX, LAMBDA_PED, sample_lifetime
 from ..core.baselines import LaTSModel
-from ..core.cluster import ClusterState, Device
+from ..core.cluster import (
+    TIER_CLOUD,
+    TIER_DEVICE,
+    TIER_EDGE_SERVER,
+    ClusterState,
+    Device,
+)
 from ..core.interference import InterferenceModel
 
 __all__ = [
@@ -37,6 +43,10 @@ __all__ = [
     "EdgeProfile",
     "make_profile",
     "make_cluster",
+    "make_multi_tier_cluster",
+    "TierSpec",
+    "MULTI_TIER_SPECS",
+    "DEFAULT_BACKHAUL",
     "SCENARIOS",
 ]
 
@@ -103,12 +113,99 @@ TASK_TYPES: Tuple[TaskType, ...] = (
 
 N_TYPES = len(TASK_TYPES)
 
-# Scenario name -> per-class failure rates (paper Table IV).
+# Scenario name -> per-class failure rates (paper Table IV).  The extra
+# "multi_tier" scenario (device -> edge server -> cloud fleet with the
+# tier-aware link matrix; see make_multi_tier_cluster) is dispatched by
+# make_cluster directly and has per-TIER rates in MULTI_TIER_SPECS.
 SCENARIOS: Dict[str, np.ndarray] = {
     "mix": LAMBDA_MIX,
     "ced": LAMBDA_CED,
     "ped": LAMBDA_PED,
 }
+
+
+# -- multi-tier fleets (arXiv:2409.10839's device -> edge -> cloud shape) ------
+@dataclass(frozen=True)
+class TierSpec:
+    """One fleet tier: its directional link rates, failure rate, and the
+    Table-III compute classes its members cycle over."""
+
+    tier: int
+    classes: Tuple[int, ...]
+    up_bw: float
+    down_bw: float
+    lam: float
+
+
+# End devices are the flaky majority with phone-like asymmetric links (an
+# uplink ~5x slower than the downlink — exactly the asymmetry the scalar
+# receiver-only bandwidth model could not express); edge servers sit on the
+# local backbone; the small cloud tier is fast but behind the WAN.
+MULTI_TIER_SPECS: Tuple[TierSpec, ...] = (
+    TierSpec(TIER_DEVICE, (0, 1, 3, 4), up_bw=8 * MB, down_bw=40 * MB,
+             lam=9e-4),
+    TierSpec(TIER_EDGE_SERVER, (2, 5, 7), up_bw=600 * MB, down_bw=600 * MB,
+             lam=3e-5),
+    TierSpec(TIER_CLOUD, (6,), up_bw=2500 * MB, down_bw=2500 * MB, lam=1e-7),
+)
+
+# (tier, tier) backhaul rates in bytes/s: device peers relay through the
+# access point, device <-> cloud crosses the WAN, edge servers share the
+# metro backbone.
+DEFAULT_BACKHAUL = np.array([
+    [25 * MB, 500 * MB, 40 * MB],
+    [500 * MB, 1250 * MB, 150 * MB],
+    [40 * MB, 150 * MB, 2500 * MB],
+])
+
+
+def make_multi_tier_cluster(
+    profile: EdgeProfile,
+    n_devices: int = 100,
+    seed: int = 0,
+    horizon: float = 330.0,
+    dt: float = 0.05,
+    edge_frac: float = 0.15,
+    cloud_frac: float = 0.05,
+    backhaul: np.ndarray = DEFAULT_BACKHAUL,
+) -> ClusterState:
+    """Build a 3-tier fleet of ``n_devices`` nodes: a large, flaky end-device
+    tier, ~``edge_frac`` edge servers, and ~``cloud_frac`` cloud nodes,
+    wired by per-device up/down rates plus the inter-tier ``backhaul``
+    matrix (bottleneck rule ``min(up[s], down[d], backhaul[ts, td])``).
+    Model artifacts are hosted on the first edge server, so uploads are
+    charged over the device <-> server link."""
+    if n_devices < 3:
+        raise ValueError("a multi-tier fleet needs >= 3 devices (one per tier)")
+    rng = np.random.default_rng(seed)
+    n_cloud = max(1, int(round(n_devices * cloud_frac)))
+    n_edge = max(1, int(round(n_devices * edge_frac)))
+    n_end = n_devices - n_edge - n_cloud
+    devices: List[Device] = []
+    did = 0
+    for spec, count in zip(MULTI_TIER_SPECS, (n_end, n_edge, n_cloud)):
+        for k in range(count):
+            cls = spec.classes[k % len(spec.classes)]
+            devices.append(Device(
+                did=did,
+                cls=cls,
+                mem_total=DEVICE_CLASSES[cls].mem_gb * GB,
+                lam=spec.lam,
+                tier=spec.tier,
+                up_bw=spec.up_bw,
+                down_bw=spec.down_bw,
+                join_time=0.0,
+                alive_until=sample_lifetime(spec.lam, rng),
+            ))
+            did += 1
+    return ClusterState(
+        devices=devices,
+        model=profile.interference,
+        horizon=horizon,
+        dt=dt,
+        backhaul=np.asarray(backhaul, dtype=np.float64),
+        model_source=n_end,            # the first edge server hosts artifacts
+    )
 
 
 def _amdahl(cores: int, frac: float) -> float:
@@ -193,7 +290,13 @@ def make_cluster(
     dt: float = 0.05,
 ) -> ClusterState:
     """Build the fleet: ``n_devices`` uniformly over the 8 classes (paper
-    §V-G), ground-truth lifetimes drawn from the scenario's Table-IV rates."""
+    §V-G), ground-truth lifetimes drawn from the scenario's Table-IV rates.
+    ``scenario="multi_tier"`` dispatches to :func:`make_multi_tier_cluster`
+    (device -> edge server -> cloud with the tier-aware link matrix)."""
+    if scenario == "multi_tier":
+        return make_multi_tier_cluster(
+            profile, n_devices=n_devices, seed=seed, horizon=horizon, dt=dt
+        )
     lams = SCENARIOS[scenario]
     rng = np.random.default_rng(seed)
     devices: List[Device] = []

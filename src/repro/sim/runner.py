@@ -35,9 +35,14 @@ __all__ = [
     "run_grid",
     "sweep_alpha",
     "sweep_gamma",
+    "SCHEME_NAMES",
+    "ALL_SCHEME_NAMES",
 ]
 
 SCHEME_NAMES = ("ibdash", "lats", "lavea", "petrel", "round_robin", "random")
+# The paper's six schemes plus the multi-tier escalation policy (which only
+# differs from greedy-min-latency on fleets that declare tiers).
+ALL_SCHEME_NAMES = SCHEME_NAMES + ("tier_escalation",)
 
 
 @dataclass
@@ -53,6 +58,9 @@ class SimConfig:
     alpha: float = 0.5
     beta: float = 0.1
     gamma: int = 3
+    # tier_escalation: escalate device -> edge -> cloud once the best
+    # same-or-lower-tier candidate's Eq. (2) latency exceeds this budget.
+    latency_budget: float = float("inf")
     # Plan each cycle's burst in one fused `orchestrate_batch` wave (all
     # plans share the cycle-start fleet snapshot) instead of per arrival.
     fused_burst: bool = False
@@ -71,6 +79,7 @@ def policy_for(name: str, profile: EdgeProfile, cfg: SimConfig) -> Policy:
         gamma=cfg.gamma,
         seed=cfg.seed,
         lats_model=profile.lats_model,
+        latency_budget=cfg.latency_budget,
     )
 
 

@@ -1,0 +1,369 @@
+"""Tier-aware link matrices (PR 3): the bottleneck rule, sender-aware
+transfer pricing, multi-tier fleets, the tier_escalation policy, the legacy
+shim routing, snapshot-scoped builder caches, and the fused-burst
+provisional-interval alignment."""
+import numpy as np
+import pytest
+
+from repro.api import (
+    Orchestrator,
+    TIER_CLOUD,
+    TIER_DEVICE,
+    TIER_EDGE_SERVER,
+    make_policy,
+    orchestrate,
+    orchestrate_batch,
+)
+from repro.core.cluster import ClusterState, Device
+from repro.core.dag import AppDAG, TaskSpec
+from repro.core.interference import InterferenceModel
+from repro.core.orchestrator import Scheduler
+from repro.sim import SimConfig, make_multi_tier_cluster, make_profile, run_one
+from repro.sim.engine import Engine
+from repro.sim.runner import ALL_SCHEME_NAMES, _make_workload, policy_for
+
+GB = 1e9
+MB = 1e6
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return make_profile(seed=0)
+
+
+def tiered_cluster(ups, downs, tiers, base=None, backhaul=None, lam=1e-6,
+                   mem=8 * GB, n_types=1, model_source=None):
+    n = len(ups)
+    if base is None:
+        base = np.full((n, n_types), 0.2)
+    model = InterferenceModel(
+        base=np.asarray(base, dtype=np.float64),
+        slope=np.full((n, n_types, n_types), 0.05),
+    )
+    devices = [
+        Device(did=i, cls=i, mem_total=mem, lam=lam, tier=tiers[i],
+               up_bw=float(ups[i]), down_bw=float(downs[i]))
+        for i in range(n)
+    ]
+    return ClusterState(devices=devices, model=model, horizon=120.0, dt=0.05,
+                        backhaul=backhaul, model_source=model_source)
+
+
+def chain_app(out_bytes=10 * MB, parent_ttype=0, child_ttype=0):
+    return AppDAG.from_tasks("app", [
+        TaskSpec("parent", ttype=parent_ttype, out_bytes=out_bytes),
+        TaskSpec("child", ttype=child_ttype, deps=("parent",)),
+    ])
+
+
+def same_placement(a, b):
+    assert a.feasible == b.feasible
+    assert a.infeasible_task == b.infeasible_task
+    assert a.est_latency == b.est_latency
+    assert set(a.tasks) == set(b.tasks)
+    for k in a.tasks:
+        ta, tb = a.tasks[k], b.tasks[k]
+        assert [r.did for r in ta.replicas] == [r.did for r in tb.replicas]
+        for ra, rb in zip(ta.replicas, tb.replicas):
+            assert ra.est_exec == rb.est_exec
+            assert ra.est_upload == rb.est_upload
+            assert ra.est_transfer == rb.est_transfer
+            assert ra.pred_fail == rb.pred_fail
+
+
+# ------------------------------------------------------- bottleneck rule --
+def test_link_matrix_bottleneck_rule():
+    """bw_eff[s, d] = min(up[s], down[d], backhaul[tier[s], tier[d]])."""
+    ups = (10 * MB, 20 * MB, 30 * MB)
+    downs = (40 * MB, 50 * MB, 60 * MB)
+    tiers = (TIER_DEVICE, TIER_EDGE_SERVER, TIER_CLOUD)
+    backhaul = np.array([
+        [25, 500, 15],
+        [500, 1250, 150],
+        [15, 150, 2500],
+    ]) * MB
+    c = tiered_cluster(ups, downs, tiers, backhaul=backhaul)
+    link = c.link_bw()
+    for s in range(3):
+        for d in range(3):
+            if s == d:
+                assert link[s, d] == np.inf     # co-located: no network hop
+            else:
+                assert link[s, d] == min(
+                    ups[s], downs[d], backhaul[tiers[s], tiers[d]]
+                )
+    # the WAN (device <-> cloud backhaul 15 MB/s) caps the fast cloud link
+    assert link[2, 0] == 15 * MB
+
+
+def test_scalar_bandwidth_is_symmetric_shim():
+    """Device(bandwidth=B) == Device(up_bw=B, down_bw=B); up/down-only
+    construction back-fills the deprecated scalar with min(up, down)."""
+    d = Device(did=0, cls=0, mem_total=GB, lam=0.0, bandwidth=50 * MB)
+    assert d.up_bw == d.down_bw == 50 * MB
+    d2 = Device(did=1, cls=0, mem_total=GB, lam=0.0,
+                up_bw=8 * MB, down_bw=40 * MB)
+    assert d2.bandwidth == 8 * MB
+    with pytest.raises(ValueError, match="bandwidth"):
+        Device(did=2, cls=0, mem_total=GB, lam=0.0)
+
+
+def test_symmetric_fleet_transfer_matches_receiver_pricing():
+    """On a symmetric fleet (up = down = old scalar bandwidth, one tier) the
+    matrix row out/min(bw, bw) is the seed's out/bw[d] exactly, so
+    placements stay bit-identical to pre-PR (see also the seed parity tests
+    in test_policy_api)."""
+    bw = 100 * MB
+    c = tiered_cluster([bw] * 3, [bw] * 3, [0] * 3)
+    plan = orchestrate(chain_app(out_bytes=30 * MB), c, 0.0,
+                       make_policy("round_robin"))
+    child = plan.tasks["child"].replicas[0]
+    parent = plan.tasks["parent"].replicas[0]
+    assert parent.did != child.did                    # round robin moved it
+    assert child.est_transfer == 30 * MB / bw         # receiver rate exactly
+
+
+# -------------------------------------------- the one-sided pricing bug --
+def test_slow_uplink_prices_the_link_not_the_endpoint():
+    """A fast device pulling from a slow phone must pay the phone's uplink:
+    the corrected ranking keeps the child co-located, and raising the
+    phone's uplink (everything else equal) releases it."""
+    # parent type runs well only on device 0 (the phone); child type is
+    # faster on device 1 (the fast box)
+    base = np.array([[0.1, 0.5], [5.0, 0.2]])
+    mk = lambda up0: tiered_cluster(
+        ups=(up0, 100 * MB), downs=(100 * MB, 100 * MB), tiers=(0, 0),
+        base=base, n_types=2,
+    )
+    app = chain_app(out_bytes=10 * MB, parent_ttype=0, child_ttype=1)
+
+    slow = orchestrate(app, mk(1 * MB), 0.0, make_policy("ibdash"))
+    assert slow.tasks["parent"].replicas[0].did == 0
+    # pulling 10 MB over the 1 MB/s uplink would cost 10 s: stay on the phone
+    assert slow.tasks["child"].replicas[0].did == 0
+
+    fast = orchestrate(app, mk(100 * MB), 0.0, make_policy("ibdash"))
+    assert fast.tasks["parent"].replicas[0].did == 0
+    # symmetric 100 MB/s link: 0.2 s exec + 0.1 s transfer beats 0.5 s
+    assert fast.tasks["child"].replicas[0].did == 1
+    assert fast.tasks["child"].replicas[0].est_transfer == pytest.approx(0.1)
+
+
+def test_upload_charged_over_model_source_link():
+    """With a declared artifact server, L(M(T_i)) is priced over the
+    bw_eff[model_source, d] link (and is free on the server itself)."""
+    ups = (8 * MB, 600 * MB, 600 * MB)
+    downs = (40 * MB, 600 * MB, 600 * MB)
+    c = tiered_cluster(ups, downs, tiers=(0, 1, 1), model_source=1)
+    up = c.upload_bw()
+    assert up[0] == 40 * MB          # min(server up 600, phone down 40)
+    assert up[2] == 600 * MB
+    assert up[1] == np.inf           # the server already holds the artifact
+    app = AppDAG.from_tasks("m", [TaskSpec(
+        "t", ttype=0, model_id="w", model_bytes=80 * MB)])
+    plan = orchestrate(app, c, 0.0, make_policy("lavea"))
+    rep = plan.tasks["t"].replicas[0]
+    assert rep.est_upload == pytest.approx(80 * MB / up[rep.did])
+
+
+# ------------------------------------------------ legacy scheduler shims --
+def test_legacy_shims_route_through_link_matrix():
+    ups = (1 * MB, 100 * MB)
+    c = tiered_cluster(ups, (100 * MB, 100 * MB), (0, 0), n_types=2,
+                       base=np.array([[0.1, 0.5], [5.0, 0.2]]))
+    app = chain_app(out_bytes=10 * MB, parent_ttype=0, child_ttype=1)
+    plan = orchestrate(app, c, 0.0, make_policy("ibdash"))
+    chosen = plan.tasks
+    pdid = chosen["parent"].replicas[0].did
+    for did in range(2):
+        want = 0.0 if did == pdid else 10 * MB / c.link_bw()[pdid, did]
+        assert Scheduler.transfer_latency(
+            app, "child", did, chosen, c
+        ) == pytest.approx(want)
+    # scalar fallback keeps the deprecated receiver-only behaviour
+    assert Scheduler.transfer_latency(
+        app, "child", 1 - pdid, chosen, 50 * MB
+    ) == pytest.approx(10 * MB / (50 * MB))
+
+    mapp = AppDAG.from_tasks("m", [TaskSpec(
+        "t", ttype=0, model_id="w", model_bytes=40 * MB)])
+    for did in range(2):
+        assert Scheduler.upload_latency(
+            mapp, "t", c.devices[did], c
+        ) == pytest.approx(40 * MB / c.upload_bw()[did])
+
+
+# --------------------------------------------- snapshot-scoped caches --
+def test_bandwidth_change_between_waves_is_reflected():
+    """set_bandwidth + the next wave reprices transfers (the builder's
+    per-wave caches cannot leak across topology changes)."""
+    c = tiered_cluster((100 * MB,) * 2, (100 * MB,) * 2, (0, 0))
+    app = chain_app(out_bytes=20 * MB)
+    p1 = orchestrate(app, c, 0.0, make_policy("round_robin"))
+    moved = p1.tasks["child"].replicas[0]
+    assert moved.est_transfer == pytest.approx(0.2)
+    c.set_bandwidth(p1.tasks["parent"].replicas[0].did, up=2 * MB)
+    p2 = orchestrate(app, c, 0.0, make_policy("round_robin"))
+    assert p2.tasks["child"].replicas[0].est_transfer == pytest.approx(10.0)
+
+
+def test_stale_wave_builder_raises():
+    from repro.core.orchestrator import _AppPlanState, _WaveContextBuilder
+
+    c = tiered_cluster((100 * MB,) * 2, (100 * MB,) * 2, (0, 0))
+    app = chain_app()
+    builder = _WaveContextBuilder(c)
+    state = _AppPlanState(app=app, arrival=0.0, n_stages=app.n_stages)
+    c.set_bandwidth(0, up=1 * MB)
+    with pytest.raises(RuntimeError, match="topology changed"):
+        builder.batch([(state, "parent", 0.0, 0)])
+
+
+# -------------------------------------------------- tier escalation ------
+def esc_cluster(base=None, mem=None, lam=1e-6):
+    """4 nodes: two end devices, one edge server, one cloud node."""
+    ups = (8 * MB, 8 * MB, 600 * MB, 2500 * MB)
+    downs = (40 * MB, 40 * MB, 600 * MB, 2500 * MB)
+    tiers = (TIER_DEVICE, TIER_DEVICE, TIER_EDGE_SERVER, TIER_CLOUD)
+    n = 4
+    if base is None:
+        base = np.array([[0.5], [0.4], [0.2], [0.05]])
+    model = InterferenceModel(base=np.asarray(base, float),
+                              slope=np.full((n, 1, 1), 0.05))
+    mems = mem if mem is not None else [8 * GB] * n
+    devices = [Device(did=i, cls=i, mem_total=mems[i], lam=lam,
+                      tier=tiers[i], up_bw=ups[i], down_bw=downs[i])
+               for i in range(n)]
+    return ClusterState(devices=devices, model=model, horizon=120.0, dt=0.05)
+
+
+def one_task():
+    return AppDAG.from_tasks("app", [TaskSpec("t", ttype=0)])
+
+
+def test_tier_escalation_prefers_lowest_tier():
+    # no budget: stay on the device tier even though edge/cloud are faster
+    plan = orchestrate(one_task(), esc_cluster(), 0.0,
+                       make_policy("tier_escalation"))
+    assert plan.tasks["t"].replicas[0].did == 1     # best *device-tier* node
+
+
+def test_tier_escalation_escalates_past_budget():
+    pol = make_policy("tier_escalation", latency_budget=0.3)
+    plan = orchestrate(one_task(), esc_cluster(), 0.0, pol)
+    assert plan.tasks["t"].replicas[0].did == 2     # device tier > 0.3 s
+
+    pol = make_policy("tier_escalation", latency_budget=0.1)
+    plan = orchestrate(one_task(), esc_cluster(), 0.0, pol)
+    assert plan.tasks["t"].replicas[0].did == 3     # only the cloud makes it
+
+    # unattainable budget: global feasible best
+    pol = make_policy("tier_escalation", latency_budget=0.01)
+    plan = orchestrate(one_task(), esc_cluster(), 0.0, pol)
+    assert plan.tasks["t"].replicas[0].did == 3
+
+
+def test_tier_escalation_escalates_on_infeasibility():
+    # end devices too small for the task: escalate to the edge server
+    c = esc_cluster(mem=[1 * GB, 1 * GB, 8 * GB, 8 * GB])
+    app = AppDAG.from_tasks("app", [TaskSpec("t", ttype=0, mem_bytes=2 * GB)])
+    plan = orchestrate(app, c, 0.0, make_policy("tier_escalation"))
+    assert plan.tasks["t"].replicas[0].did == 2
+
+
+def test_tier_escalation_single_tier_degenerates_to_greedy():
+    c = tiered_cluster((100 * MB,) * 3, (100 * MB,) * 3, (0,) * 3,
+                       base=np.array([[0.3], [0.1], [0.2]]))
+    plan = orchestrate(one_task(), c, 0.0, make_policy("tier_escalation"))
+    assert plan.tasks["t"].replicas[0].did == 1
+
+
+# --------------------------------------- batched == scalar on 3 tiers ----
+@pytest.mark.parametrize("scheme", ALL_SCHEME_NAMES)
+def test_decide_batch_parity_on_asymmetric_three_tier_fleet(scheme, profile):
+    """All six schemes + tier_escalation: one fused decide_batch over a
+    multi-tier wave == looping decide over the same rows, bit for bit."""
+    cfg = SimConfig(n_cycles=1, instances_per_cycle=60, scenario="multi_tier",
+                    seed=0, n_devices=30, latency_budget=4.0)
+    apps, times = _make_workload(cfg)
+    cluster = make_multi_tier_cluster(profile, n_devices=cfg.n_devices,
+                                      seed=cfg.seed, horizon=cfg.horizon + 30)
+    kw = dict(profile=profile, cfg=cfg)
+    plans_b = orchestrate_batch(apps, cluster, policy_for(scheme, **kw),
+                                times=times)
+    plans_s = orchestrate_batch(apps, cluster, policy_for(scheme, **kw),
+                                times=times, batched=False)
+    for a, b in zip(plans_b, plans_s):
+        same_placement(a.placement, b.placement)
+
+
+def test_multi_tier_scenario_end_to_end_fused(profile):
+    """tier_escalation through Orchestrator.submit_batch(fused=True) on the
+    multi_tier scenario: every instance resolves and some work escalates off
+    the device tier."""
+    cfg = SimConfig(n_cycles=1, instances_per_cycle=40, scenario="multi_tier",
+                    seed=2, n_devices=30, latency_budget=2.0)
+    apps, times = _make_workload(cfg)
+    cluster = make_multi_tier_cluster(profile, n_devices=cfg.n_devices,
+                                      seed=cfg.seed, horizon=cfg.horizon + 30)
+    orch = Orchestrator(cluster, policy_for("tier_escalation", profile, cfg),
+                        seed=cfg.seed)
+    orch.submit_batch(apps, times, fused=True)
+    orch.drain()
+    res = orch.result("multi_tier", horizon=cfg.horizon)
+    assert res.n == len(apps)
+    assert all(np.isfinite(r.finished) for r in res.instances)
+    n_end = sum(1 for d in cluster.devices if d.tier == TIER_DEVICE)
+    assert res.load_per_device[n_end:].sum() > 0      # escalation happened
+
+
+def test_multi_tier_run_one(profile):
+    cfg = SimConfig(n_cycles=1, instances_per_cycle=30, scenario="multi_tier",
+                    seed=1, n_devices=24, fused_burst=True, latency_budget=3.0)
+    res = run_one("tier_escalation", cfg, profile)
+    assert res.n == 30
+    assert all(r.failed or np.isfinite(r.service_time) for r in res.instances)
+
+
+# ------------------------------- fused-burst provisional intervals -------
+def test_fused_wave_planned_at_snapshot_time_leaves_no_residue():
+    """Plans computed against one snapshot (plan.now=0) applied at later
+    arrival times: the engine must cancel the provisional interval where
+    ``apply`` recorded it (plan.now + est_start), not at arrival +
+    est_start — post-run T_alloc is exactly clean."""
+    c = tiered_cluster((100 * MB,) * 3, (100 * MB,) * 3, (0,) * 3,
+                       base=np.array([[0.1], [0.12], [0.14]]))
+    pol = make_policy("round_robin")
+    apps = [chain_app(out_bytes=2 * MB).relabel(f"#{i}") for i in range(6)]
+    plans = orchestrate_batch(apps, c, pol, now=0.0)     # one snapshot at t=0
+    eng = Engine(c, pol, noise_sigma=0.0)
+    times = [3.0 + 0.1 * i for i in range(6)]            # arrivals later
+    eng.add_arrivals(apps, times, plans=plans)
+    eng.drain()
+    assert all(not r.failed for r in eng.records)
+    # nothing actually ran before t=3: the provisional wave (recorded at
+    # t=0 + est_start, cancelled at the same origin) must net to zero there
+    for t in (0.05, 0.5, 1.5, 2.5):
+        assert c.counts_at(t).sum() == 0
+    # and no bucket anywhere went negative (cancellation hit what was added)
+    assert float(c.alloc.min()) >= 0.0
+
+
+def test_failed_app_cancels_unstarted_provisional_intervals():
+    """When an app dies mid-DAG, the provisional T_alloc occupancy of its
+    never-started later stages is removed (no ghost residue)."""
+    model = InterferenceModel(base=np.array([[0.1]]),
+                              slope=np.full((1, 1, 1), 0.05))
+    dev = Device(did=0, cls=0, mem_total=8 * GB, lam=1e-3,
+                 bandwidth=100 * MB, alive_until=0.05)   # dies mid-task
+    c = ClusterState(devices=[dev], model=model, horizon=60.0, dt=0.05)
+    eng = Engine(c, make_policy("round_robin"), noise_sigma=0.0)
+    eng.add_arrivals([chain_app(out_bytes=1 * MB)], [0.0])
+    eng.drain()
+    assert eng.records[0].failed
+    finished = eng.records[0].finished
+    # beyond the failed parent's actual run there must be NO occupancy: the
+    # child never started, so its provisional interval was cancelled
+    b0 = c.bucket(finished + 2 * c.dt)
+    assert float(np.abs(c.alloc[:, :, b0:]).max()) == 0.0
+    assert float(c.alloc.min()) >= 0.0
