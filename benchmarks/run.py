@@ -16,6 +16,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from . import (
     bench_alpha_gamma,
     bench_availability,
+    bench_churn,
     bench_failure,
     bench_interference,
     bench_load,
@@ -39,6 +40,7 @@ BENCHES = {
     "microscopic": bench_microscopic,     # Fig. 11
     "alpha_gamma": bench_alpha_gamma,     # Fig. 12
     "place": bench_place,                 # beyond-paper burst placement
+    "churn": bench_churn,                 # beyond-paper churn recovery
     "serving": bench_serving,             # beyond-paper fleet policies
     "roofline": bench_roofline,           # §Roofline (dry-run grid)
     "serving_shard": bench_serving_shard, # beyond-paper TP serving sharding

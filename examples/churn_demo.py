@@ -1,0 +1,78 @@
+"""Churn runtime demo: device join/leave streams, detection, and recovery.
+
+The paper's headline scenario — personal edge devices that leave the
+network unannounced (§V-F: P(ED) = exp(-lambda t), validated on a campus
+mobility trace) — driven end to end: an exponential leave/rejoin event
+stream over a scaled-PED fleet, DEVICE_DOWN events that kill in-flight
+replicas on the spot, and the three recovery strategies racing on the same
+workload:
+
+  * fail_fast — the paper's Eq. (4): lose the instance immediately;
+  * failover — restart the dead task on the best surviving device;
+  * replan   — re-invoke the placement policy on the live sub-fleet for
+               the dead task and its not-yet-started downstream stages.
+
+    PYTHONPATH=src python examples/churn_demo.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.api import Orchestrator, SimConfig, make_cluster, make_profile
+from repro.sim.churn import exponential_churn
+from repro.sim.runner import _make_workload, policy_for
+
+RECOVERIES = ("fail_fast", "failover", "replan")
+
+
+def main():
+    profile = make_profile(seed=0)
+    cfg = SimConfig(scenario="churn", n_cycles=4, instances_per_cycle=300,
+                    n_devices=80, seed=0)
+
+    peek = make_cluster(profile, scenario=cfg.scenario,
+                        n_devices=cfg.n_devices, seed=cfg.seed,
+                        horizon=cfg.horizon + 30.0)
+    schedule = exponential_churn(peek, horizon=cfg.horizon + 25.0,
+                                 seed=cfg.seed + 101,
+                                 mean_downtime=cfg.mean_downtime)
+    leaves = sum(1 for e in schedule.events if e.kind == "leave")
+    joins = schedule.n_events - leaves
+    print(f"scenario=churn  devices={cfg.n_devices}  "
+          f"horizon={cfg.horizon:.0f}s  schedule: {leaves} departures, "
+          f"{joins} rejoins (mean downtime {cfg.mean_downtime:.0f}s)")
+
+    for scheme in ("lavea", "ibdash"):
+        print(f"\n--- {scheme} "
+              f"({'no proactive replication' if scheme != 'ibdash' else 'pf-aware + replication'}) ---")
+        print(f"{'recovery':10s} {'P_f':>7s} {'service(s)':>10s} "
+              f"{'deaths':>7s} {'recovered':>9s} {'lost':>5s} {'replans':>8s}")
+        for recovery in RECOVERIES:
+            cluster = make_cluster(profile, scenario=cfg.scenario,
+                                   n_devices=cfg.n_devices, seed=cfg.seed,
+                                   horizon=cfg.horizon + 30.0)
+            churn = exponential_churn(cluster, horizon=cfg.horizon + 25.0,
+                                      seed=cfg.seed + 101,
+                                      mean_downtime=cfg.mean_downtime)
+            orch = Orchestrator(cluster, policy_for(scheme, profile, cfg),
+                                seed=cfg.seed, churn=churn, recovery=recovery,
+                                detection_delay=cfg.detection_delay)
+            apps, times = _make_workload(cfg)
+            orch.submit_batch(apps, times)
+            orch.drain()
+            res = orch.result(cfg.scenario, cfg.horizon)
+            s = orch.stats
+            print(f"{recovery:10s} {res.prob_failure:7.4f} "
+                  f"{res.avg_service_time:10.3f} {s['replica_deaths']:7d} "
+                  f"{s['recovered']:9d} {s['lost']:5d} {s['replans']:8d}")
+
+    print("\nfailover/replan turn departures that caught a task in flight "
+          "into recovered instances;\nIBDASH's proactive replication absorbs "
+          "most of them before recovery is even needed.")
+
+
+if __name__ == "__main__":
+    main()

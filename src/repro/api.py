@@ -66,6 +66,12 @@ from .core.policy import (
     make_policy,
     register_policy,
 )
+from .core.recovery import (
+    RecoveryStrategy,
+    available_recoveries,
+    make_recovery,
+    register_recovery,
+)
 from .sim.engine import Engine, InstanceRecord, SimResult
 
 __all__ = [
@@ -85,6 +91,10 @@ __all__ = [
     "register_policy",
     "make_policy",
     "available_policies",
+    "RecoveryStrategy",
+    "register_recovery",
+    "make_recovery",
+    "available_recoveries",
     "IBDASHConfig",
     "ApplyToken",
     "ClusterState",
@@ -121,13 +131,41 @@ class Orchestrator:
         *,
         seed: int = 0,
         noise_sigma: float = 0.10,
+        churn=None,
+        recovery: Union[str, RecoveryStrategy] = "fail_fast",
+        detection_delay: Optional[float] = None,
+        max_retries: Optional[int] = None,
+        track_intervals: bool = False,
         **policy_kwargs,
     ):
+        """``churn`` takes a :class:`repro.sim.churn.ChurnSchedule`: the
+        engine then processes DEVICE_DOWN / DEVICE_UP events (in-flight
+        replicas on a departing device are killed, capacity is returned and
+        later re-admitted on rejoin).  ``recovery`` names the registered
+        :class:`~repro.core.recovery.RecoveryStrategy` applied when a task
+        loses its last replica — ``fail_fast`` (the default) is
+        bit-identical to the pre-churn engine."""
         if isinstance(policy, str):
             policy = make_policy(policy, seed=seed, **policy_kwargs)
+        recovery_kw = {
+            k: v for k, v in dict(
+                detection_delay=detection_delay, max_retries=max_retries
+            ).items() if v is not None
+        }
+        if isinstance(recovery, str):
+            recovery = make_recovery(recovery, **recovery_kw)
+        elif recovery_kw:
+            raise ValueError(
+                f"{sorted(recovery_kw)} only apply when `recovery` is a "
+                "registered name; configure the RecoveryStrategy instance "
+                "directly instead"
+            )
         self.cluster = cluster
         self.policy = policy
-        self.engine = Engine(cluster, policy, seed=seed, noise_sigma=noise_sigma)
+        self.engine = Engine(
+            cluster, policy, seed=seed, noise_sigma=noise_sigma,
+            churn=churn, recovery=recovery, track_intervals=track_intervals,
+        )
 
     # -- online interface -------------------------------------------------------
     def submit(self, app: AppDAG, t: float) -> "Orchestrator":
@@ -211,6 +249,13 @@ class Orchestrator:
     def pending_events(self) -> int:
         return len(self.engine.events)
 
+    @property
+    def stats(self) -> dict:
+        """Churn-runtime counters: device_down/device_up, replica_deaths,
+        task_failovers, replans, recovered (instances that survived a
+        replica death) and lost (instances that failed)."""
+        return self.engine.stats
+
 
 _LAZY = {
     "run_one": ("repro.sim.runner", "run_one"),
@@ -223,6 +268,12 @@ _LAZY = {
     "make_multi_tier_cluster": ("repro.sim.profiles", "make_multi_tier_cluster"),
     "EdgeProfile": ("repro.sim.profiles", "EdgeProfile"),
     "ServingFleet": ("repro.serve.scheduler", "ServingFleet"),
+    "ChurnSchedule": ("repro.sim.churn", "ChurnSchedule"),
+    "ChurnEvent": ("repro.sim.churn", "ChurnEvent"),
+    "exponential_churn": ("repro.sim.churn", "exponential_churn"),
+    "deterministic_churn": ("repro.sim.churn", "deterministic_churn"),
+    "trace_churn": ("repro.sim.churn", "trace_churn"),
+    "churn_from_monitor": ("repro.sim.churn", "churn_from_monitor"),
 }
 
 

@@ -42,6 +42,15 @@ from .orchestrator import (
     TaskPlacement,
     orchestrate,
 )
+from .recovery import (
+    FailFastRecovery,
+    FailoverRecovery,
+    RecoveryStrategy,
+    ReplanRecovery,
+    available_recoveries,
+    make_recovery,
+    register_recovery,
+)
 from .policy import (
     IBDASHPolicy,
     LAVEAPolicy,
@@ -87,6 +96,13 @@ __all__ = [
     "register_policy",
     "make_policy",
     "available_policies",
+    "RecoveryStrategy",
+    "FailFastRecovery",
+    "FailoverRecovery",
+    "ReplanRecovery",
+    "register_recovery",
+    "make_recovery",
+    "available_recoveries",
     "IBDASHPolicy",
     "RandomPolicy",
     "RoundRobinPolicy",

@@ -78,6 +78,7 @@ class FleetSnapshot:
     link_bw: np.ndarray      # (D, D) bw_eff[s, d] = min(up[s], down[d], backhaul)
     mem_total: np.ndarray    # (D,) H(ED) in bytes (memory-feasibility data)
     join_times: np.ndarray   # (D,) device join times
+    alive: np.ndarray        # (D,) bool: not yet departed at t (churn mask)
     counts: np.ndarray       # (D, N) Task_info at t
     queue_len: np.ndarray    # (D,) total running tasks per device
     base: np.ndarray         # (P, N) ED_mc base latencies c[p, i]
@@ -225,6 +226,13 @@ class BatchedPolicyContext:
     def mem_total(self) -> np.ndarray:
         return self.fleet.mem_total
 
+    @property
+    def alive(self) -> np.ndarray:
+        """(D,) bool: devices not yet departed when the wave was planned.
+        Already ANDed into ``feasible``; exposed for custom policies that
+        build their own masks."""
+        return self.fleet.alive
+
     def feasible_ids(self, b: int) -> np.ndarray:
         return np.flatnonzero(self.feasible_pool[self.row_pool[b]])
 
@@ -281,6 +289,7 @@ class BatchedPolicyContext:
             counts=self.counts_pool[gc],
             classes=self.fleet.classes,
             tiers=self.fleet.tiers,
+            alive=self.fleet.alive,
         )
 
 

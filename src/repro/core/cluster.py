@@ -184,6 +184,9 @@ class ClusterState:
         devs = self.devices
         self._classes = np.array([d.cls for d in devs], dtype=np.int64)
         self._lams = np.array([d.lam for d in devs], dtype=np.float64)
+        self._alive_until = np.array(
+            [d.alive_until for d in devs], dtype=np.float64
+        )
         self._bw = np.array([d.bandwidth for d in devs], dtype=np.float64)
         self._mem_total = np.array([d.mem_total for d in devs], dtype=np.float64)
         self._tiers = np.array([d.tier for d in devs], dtype=np.int64)
@@ -224,6 +227,44 @@ class ClusterState:
         if up is not None or down is not None:
             d.bandwidth = float(min(d.up_bw, d.down_bw))
         self.refresh_topology()
+
+    # -- device lifecycle (the churn runtime's view) ----------------------------
+    def alive_mask(self, t: float) -> np.ndarray:
+        """(D,) bool: devices that have not departed as of time ``t``.
+
+        A device past its ``alive_until`` has already left the network, so
+        the orchestrator can observe the departure (missed heartbeats) and
+        MUST NOT place onto it — :meth:`snapshot` and the wave context
+        builder bake this mask into every policy's feasibility.  Future
+        departures stay invisible: ``alive_until > t`` is indistinguishable
+        from immortal, exactly the paper's silent-departure model (the
+        orchestrator only ever prices future deaths probabilistically via
+        ``F(T_i)``)."""
+        return t < self._alive_until
+
+    def mark_down(self, did: int, t: float) -> None:
+        """Record that device ``did`` left the network at time ``t`` (the
+        churn runtime's DEVICE_DOWN).  Snapshots taken at or after ``t``
+        mask it infeasible; the topology version bumps so a live wave
+        builder raises instead of planning onto the departed device."""
+        dev = self.devices[did]
+        dev.alive_until = min(dev.alive_until, float(t))
+        self._alive_until[did] = dev.alive_until
+        self.topology_version += 1
+
+    def mark_up(
+        self, did: int, t: float, alive_until: float = float("inf")
+    ) -> None:
+        """Re-admit device ``did`` at time ``t`` (the churn runtime's
+        DEVICE_UP): it rejoins empty — free memory, cold model cache, a
+        fresh ``join_time`` (its availability clock restarts) — and stays
+        until ``alive_until`` (its next scheduled departure)."""
+        dev = self.devices[did]
+        dev.join_time = float(t)
+        dev.alive_until = float(alive_until)
+        dev.init_dynamic()
+        self._alive_until[did] = dev.alive_until
+        self.topology_version += 1
 
     # -- static fleet views ------------------------------------------------------
     @property
@@ -308,6 +349,28 @@ class ClusterState:
             stacklevel=3,
         )
 
+    def cancel_from(
+        self, did: int, ttype: int, t0: float, t1: float, t_cut: float,
+        w: float = 1.0,
+    ) -> None:
+        """Remove the ``[t_cut, t1)`` tail of a previously recorded
+        ``[t0, t1)`` occupancy interval, bucket-exactly.
+
+        Used when a replica is killed mid-flight (device departure, app
+        failure): the capacity it would have held from the cut onward is
+        returned to T_alloc.  Operates on the *same* buckets the original
+        :meth:`add_interval` touched — the partial bucket containing the
+        cut is removed with the tail — so a cancelled interval can never
+        leave negative residue, whatever the bucket alignment."""
+        if t1 > self.horizon:
+            t1 = self.horizon
+        if t0 >= self.horizon or t_cut >= t1:
+            return
+        b0 = self.bucket(t0)
+        b1 = max(self.bucket(t1), b0 + 1)
+        bc = min(max(self.bucket(t_cut), b0), b1)
+        self.alloc[did, ttype, bc:b1] -= w
+
     def counts_at(self, t: float) -> np.ndarray:
         """Task_info snapshot at time t: (D, N) running-task counts.
 
@@ -340,6 +403,7 @@ class ClusterState:
         *,
         counts: Optional[np.ndarray] = None,
         join_times: Optional[np.ndarray] = None,
+        alive: Optional[np.ndarray] = None,
     ) -> FleetSnapshot:
         """Struct-of-arrays :class:`FleetSnapshot` of the fleet at time
         ``t``: the static device vectors plus the Task_info counts — the
@@ -352,6 +416,8 @@ class ClusterState:
             counts = np.asarray(self.counts_at(t), dtype=np.float64)
         if join_times is None:
             join_times = np.array([d.join_time for d in self.devices])
+        if alive is None:
+            alive = self.alive_mask(t)
         return FleetSnapshot(
             t=t,
             classes=self._classes,
@@ -361,6 +427,7 @@ class ClusterState:
             link_bw=self._link,
             mem_total=self._mem_total,
             join_times=join_times,
+            alive=alive,
             counts=counts,
             queue_len=counts.sum(axis=1),
             base=self.model.base,

@@ -178,6 +178,9 @@ class _AppPlanState:
     arrival: float
     n_stages: int
     placements: Dict[str, TaskPlacement] = field(default_factory=dict)
+    # Already-decided tasks (completed / in-flight on a replan): their
+    # placements price downstream transfers but are never re-decided.
+    pinned: frozenset = frozenset()
     stage_offset: float = 0.0
     stage_latency: float = 0.0
     alive: bool = True
@@ -196,7 +199,7 @@ class _WaveContextBuilder:
     feasibility, pf) are assembled as ``(B, D)`` tensors in one shot.
     """
 
-    def __init__(self, cluster: ClusterState):
+    def __init__(self, cluster: ClusterState, now: float = 0.0):
         self.cluster = cluster
         self.link = cluster.link_bw()        # (D, D) tier-aware bw_eff matrix
         self.upload_bw = cluster.upload_bw() # (D,) artifact-path bandwidth
@@ -205,6 +208,13 @@ class _WaveContextBuilder:
         self.classes = cluster.classes()
         self.join = np.array([d.join_time for d in cluster.devices])
         self.n_dev = cluster.n_devices
+        # Devices already departed at the planning instant are masked out of
+        # every feasibility row: the orchestrator can observe a PAST
+        # departure (missed heartbeats), while future deaths remain priced
+        # probabilistically through pf (silent-departure model).  Constant
+        # for the whole wave — churn events cannot fire inside one pure
+        # planning call (and would bump topology_version if they did).
+        self.alive = np.asarray(cluster.alive_mask(float(now)), dtype=bool)
         # Wave-level caches, scoped to ONE snapshot (planning is pure:
         # cluster state cannot change under us, so cached vectors stay valid
         # for the whole wave; `_topo_version` makes any violation loud).
@@ -283,7 +293,8 @@ class _WaveContextBuilder:
         to the one construction site, reusing the wave's cached arrays)."""
         bkt = self.cluster.bucket(t)
         return self.cluster.snapshot(
-            t, counts=self.counts_at_bucket(bkt), join_times=self.join
+            t, counts=self.counts_at_bucket(bkt), join_times=self.join,
+            alive=self.alive,
         )
 
     def feasible_row(self, spec) -> np.ndarray:
@@ -293,7 +304,7 @@ class _WaveContextBuilder:
         key = spec.mem_bytes + spec.model_bytes
         f = self._feasible.get(key)
         if f is None:
-            f = self.mem_total >= key
+            f = (self.mem_total >= key) & self.alive
             self._feasible[key] = f
             self._feasible_any[key] = bool(f.any())
         return f
@@ -448,6 +459,7 @@ def orchestrate_batch(
     now: float = 0.0,
     times: Optional[Sequence[float]] = None,
     batched: bool = True,
+    pinned: Optional[Sequence[Optional[Dict[str, TaskPlacement]]]] = None,
 ) -> List[Plan]:
     """Pure fused planning for a whole arrival wave of B applications.
 
@@ -468,11 +480,22 @@ def orchestrate_batch(
     pin down.  For stateless policies the result also equals looping
     ``orchestrate`` per app without intermediate applies.
 
-    An application whose task has no memory-feasible device is marked
+    An application whose task has no memory-feasible live device is marked
     infeasible at that task and drops out of later wave-stages; its rows
     are screened out *before* the policy sees the batch, so stateful
     policies consume nothing for them (matching the scalar path, which
-    returns before calling ``decide``).
+    returns before calling ``decide``).  Devices already departed at the
+    wave's planning instant (the earliest arrival) are masked infeasible
+    for every row — a policy can never select a dead device.
+
+    ``pinned`` (aligned with ``apps``; entries may be None) carries task
+    placements that are already decided — completed or in-flight tasks of a
+    partially-executed instance.  Pinned tasks are not re-decided and emit
+    no rows (stateful policies consume nothing for them), but their chosen
+    devices still price the transfer costs of downstream tasks, and the
+    returned plan contains ONLY the newly planned tasks — this is the
+    replan recovery strategy's substrate (re-place a dead task and the
+    not-yet-started remainder of its DAG on the live sub-fleet).
     """
     if isinstance(policy, str):
         policy = make_policy(policy)
@@ -480,12 +503,22 @@ def orchestrate_batch(
         times = [float(now)] * len(apps)
     elif len(times) != len(apps):
         raise ValueError("apps and times must have equal length")
+    if pinned is None:
+        pinned = [None] * len(apps)
+    elif len(pinned) != len(apps):
+        raise ValueError("apps and pinned must have equal length")
 
-    builder = _WaveContextBuilder(cluster)
+    builder = _WaveContextBuilder(
+        cluster, now=min(times, default=float(now))
+    )
     bucket = cluster.bucket
     states = [
-        _AppPlanState(app=app, arrival=float(t), n_stages=app.n_stages)
-        for app, t in zip(apps, times)
+        _AppPlanState(
+            app=app, arrival=float(t), n_stages=app.n_stages,
+            placements=dict(pin) if pin else {},
+            pinned=frozenset(pin) if pin else frozenset(),
+        )
+        for app, t, pin in zip(apps, times, pinned)
     ]
     max_stages = max((st.n_stages for st in states), default=0)
 
@@ -498,7 +531,8 @@ def orchestrate_batch(
             t_start = st.arrival + st.stage_offset
             bkt = bucket(t_start)
             for tname in st.app.stages[s]:              # line 4
-                rows.append((st, tname, t_start, bkt))
+                if tname not in st.pinned:
+                    rows.append((st, tname, t_start, bkt))
 
         # Screen memory-infeasible rows before the policy sees the batch:
         # the app dies at its first infeasible task and its later rows are
@@ -567,11 +601,16 @@ def orchestrate_batch(
             if st.alive and s < st.n_stages:
                 st.stage_offset += st.stage_latency
 
-    # L(G) = sum of stage maxima (Eq. 3) == the final stage offset.
+    # L(G) = sum of stage maxima (Eq. 3) == the final stage offset.  On a
+    # replan, pinned tasks drop out: the plan holds only the newly placed
+    # remainder (apply must not re-record the pinned tasks' occupancy).
     return [
         Plan(app=st.app, now=st.arrival, placement=Placement(
             app_name=st.app.name,
-            tasks=st.placements,
+            tasks=(
+                {k: v for k, v in st.placements.items() if k not in st.pinned}
+                if st.pinned else st.placements
+            ),
             est_latency=st.stage_offset if st.alive else 0.0,
             feasible=st.alive,
             infeasible_task=st.infeasible_task,
@@ -583,16 +622,20 @@ def orchestrate_batch(
 def orchestrate(
     app: AppDAG, cluster: ClusterState, now: float, policy: Policy,
     *, batched: bool = True,
+    pinned: Optional[Dict[str, TaskPlacement]] = None,
 ) -> Plan:
     """Pure planning: walk the staged DAG (Algorithm 1 lines 3-4), build one
     batched context per stage, let the policy pick devices (one
     ``decide_batch`` call per stage, or ``decide`` per task with
     ``batched=False`` — the two are bit-identical), and assemble the Plan.
     Cluster state is only read — call ``cluster.apply(plan)`` to make the
-    placement real (or discard the plan for free).
+    placement real (or discard the plan for free).  ``pinned`` placements
+    are kept as-is and only the remaining tasks are planned (the replan
+    recovery path; see :func:`orchestrate_batch`).
     """
     return orchestrate_batch(
-        [app], cluster, policy, times=[now], batched=batched
+        [app], cluster, policy, times=[now], batched=batched,
+        pinned=[pinned] if pinned else None,
     )[0]
 
 

@@ -100,6 +100,9 @@ class PolicyContext:
     # (D,) fleet tier ids (0=device, 1=edge server, 2=cloud); None on
     # contexts built before multi-tier fleets existed == single-tier.
     tiers: Optional[np.ndarray] = None
+    # (D,) bool churn mask: devices not yet departed when the plan was made.
+    # Already ANDed into ``feasible``; None on hand-built contexts == all up.
+    alive: Optional[np.ndarray] = None
 
     @property
     def n_devices(self) -> int:

@@ -81,11 +81,21 @@ class FleetMonitor:
 
     # -- availability model (paper Fig. 7 / Table IV, estimated online) -----
     def lam(self, cls: str = "default") -> float:
-        """MLE failure rate: deaths / alive-exposure (exponential model)."""
+        """MLE failure rate of one pod class, via the SAME
+        :func:`~repro.core.availability.fit_failure_rate` estimator the
+        paper fits offline on the CrowdBind trace (deaths / alive-exposure,
+        right-censored exponential): the class's accumulated heartbeat
+        exposure is one censored observation plus one death record per
+        timeout.  These live estimates feed straight back into the churn
+        generator (:func:`repro.sim.churn.churn_from_monitor`), so the
+        monitoring runtime and the simulator share one availability model."""
         exposure = self._exposure.get(cls, 0.0)
         if exposure <= 0:
             return 1e-6
-        return max(self._deaths.get(cls, 0), 0) / exposure or 1e-9
+        deaths = self._deaths.get(cls, 0)
+        return fit_failure_rate(
+            [exposure] + [0.0] * deaths, [True] + [False] * deaths
+        ) or 1e-9
 
     def fleet_lams(self) -> List[float]:
         return [self.lam(p.cls) for p in self.pods.values() if p.alive]

@@ -101,6 +101,18 @@ class ServingFleet:
         seed: int = 0,
         horizon: float = 120.0,
         latency_budget: float = float("inf"),
+        # -- churn runtime: replica preemption + recovery ----------------------
+        # ``churn=True`` generates exponential preemption/re-provision cycles
+        # over the replicas from their lams; or pass a ChurnSchedule.  When a
+        # replica dies mid-request, ``recovery="replan"`` re-places the
+        # in-flight stages on the survivors — the decode stage's KV cache is
+        # re-sharded onto the new replica at the link-matrix transfer price.
+        churn=None,
+        recovery: str = "fail_fast",
+        detection_delay: float = 0.1,
+        max_retries: int = 2,
+        mean_downtime: float = 15.0,
+        churn_seed: int = 7,
     ):
         self.interference = interference
         classes = (
@@ -124,6 +136,13 @@ class ServingFleet:
             devices=devices, model=interference, horizon=horizon, dt=0.02,
             backhaul=backhaul,
         )
+        if churn is True:
+            from ..sim.churn import exponential_churn
+
+            churn = exponential_churn(
+                self.cluster, horizon=horizon, seed=churn_seed,
+                rejoin=True, mean_downtime=mean_downtime,
+            )
         # Every scheme comes out of the policy registry; the online flow is
         # the unified Orchestrator façade (submit -> step -> result).
         self.orchestrator = Orchestrator(
@@ -131,6 +150,10 @@ class ServingFleet:
             make_policy(policy, alpha=alpha, beta=beta, gamma=gamma, seed=seed,
                         latency_budget=latency_budget),
             seed=seed,
+            churn=churn,
+            recovery=recovery,
+            detection_delay=detection_delay,
+            max_retries=max_retries,
         )
         self.horizon = horizon
 

@@ -3,10 +3,20 @@ evaluation: device profiles (Table III/IV), the four DAG applications
 (Fig. 6), the event engine, and the scheme x scenario experiment runner.
 """
 from .apps import APP_BUILDERS, all_apps, lightgbm_app, mapreduce_app, matrix_app, video_app
+from .churn import (
+    ChurnEvent,
+    ChurnSchedule,
+    churn_from_monitor,
+    deterministic_churn,
+    exponential_churn,
+    trace_churn,
+)
 from .engine import Engine, InstanceRecord, SimResult
 from .profiles import (
+    CHURN_LAMBDA_SCALE,
     DEFAULT_BACKHAUL,
     DEVICE_CLASSES,
+    LAMBDA_CHURN,
     MULTI_TIER_SPECS,
     SCENARIOS,
     TASK_TYPES,
@@ -35,10 +45,18 @@ __all__ = [
     "mapreduce_app",
     "matrix_app",
     "video_app",
+    "ChurnEvent",
+    "ChurnSchedule",
+    "churn_from_monitor",
+    "deterministic_churn",
+    "exponential_churn",
+    "trace_churn",
     "Engine",
     "InstanceRecord",
     "SimResult",
     "DEVICE_CLASSES",
+    "CHURN_LAMBDA_SCALE",
+    "LAMBDA_CHURN",
     "DEFAULT_BACKHAUL",
     "MULTI_TIER_SPECS",
     "SCENARIOS",

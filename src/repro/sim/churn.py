@@ -1,0 +1,217 @@
+"""Device lifecycle event streams for the churn runtime (paper §V-F).
+
+The paper models a device's availability as ``P(ED) = exp(-lambda t)`` and
+validates the exponential fit on a one-month campus mobility trace — but
+the seed simulator only ever *sampled* one lifetime per device and let
+tasks silently land on the departed.  This module turns the availability
+model into an explicit event stream the engine can react to:
+
+  * :func:`exponential_churn` — per-device exponential leave/rejoin cycles
+    from the fleet's Table-IV rates (or any per-device override, e.g. the
+    live lambda-MLE estimates of :class:`repro.ft.runtime.FleetMonitor`);
+  * :func:`deterministic_churn` — an explicit ``(t, did, kind)`` script
+    (tests, adversarial what-if schedules);
+  * :func:`trace_churn` — replay of an availability trace: timestamped
+    ``(t, did, alive)`` observations, exactly the shape
+    :func:`repro.core.availability.fit_failure_rate` consumes — so one
+    recorded trace can both fit the model and drive the simulator;
+  * :func:`churn_from_monitor` — the ``sim``/``ft`` bridge: generate churn
+    at the failure rates a :class:`FleetMonitor` estimated online, closing
+    the loop between heartbeat-observed reality and simulated futures.
+
+A :class:`ChurnSchedule` installed on a cluster becomes the single source
+of truth for device lifetimes: each device's ``alive_until`` is set to its
+first scheduled departure (``+inf`` if it never leaves), join events carry
+the device's next departure so a rejoined device knows its new lifetime,
+and the engine turns the events into DEVICE_DOWN / DEVICE_UP processing.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.cluster import ClusterState
+from ..core.availability import sample_lifetime
+
+__all__ = [
+    "ChurnEvent",
+    "ChurnSchedule",
+    "exponential_churn",
+    "deterministic_churn",
+    "trace_churn",
+    "churn_from_monitor",
+]
+
+LEAVE, JOIN = "leave", "join"
+
+
+@dataclass(frozen=True)
+class ChurnEvent:
+    """One device lifecycle transition.
+
+    ``until`` is only meaningful on ``join`` events: the device's next
+    scheduled departure (``+inf`` if it stays), so the engine can re-arm
+    ``alive_until`` — the ground truth the passive failure path and the
+    in-flight ``ok`` precompute read — in O(1) at the event."""
+
+    t: float
+    did: int
+    kind: str                       # "leave" | "join"
+    until: float = float("inf")
+
+
+@dataclass(frozen=True)
+class ChurnSchedule:
+    """A time-sorted stream of device leave/join events."""
+
+    events: Tuple[ChurnEvent, ...]
+
+    @property
+    def n_events(self) -> int:
+        return len(self.events)
+
+    def __iter__(self):
+        return iter(self.events)
+
+    def device_events(self, did: int) -> Tuple[ChurnEvent, ...]:
+        return tuple(ev for ev in self.events if ev.did == did)
+
+    def first_leave(self, did: int) -> float:
+        for ev in self.events:
+            if ev.did == did and ev.kind == LEAVE:
+                return ev.t
+        return float("inf")
+
+    def install(self, cluster: ClusterState) -> "ChurnSchedule":
+        """Make this schedule the single source of truth for the fleet's
+        lifetimes: every device's ``alive_until`` becomes its first
+        scheduled departure (``+inf`` when the schedule never removes it).
+        Idempotent; returns self for chaining."""
+        firsts: Dict[int, float] = {}
+        for ev in self.events:
+            if ev.kind == LEAVE and ev.did not in firsts:
+                firsts[ev.did] = ev.t
+        for d in cluster.devices:
+            d.alive_until = firsts.get(d.did, float("inf"))
+        cluster.refresh_topology()
+        return self
+
+
+def _finalize(events: List[ChurnEvent]) -> ChurnSchedule:
+    """Sort by time and stamp each join event with the device's next
+    departure (the rejoined lifetime the engine re-arms)."""
+    events = sorted(events, key=lambda ev: (ev.t, ev.did))
+    next_leave: Dict[int, List[float]] = {}
+    for ev in events:
+        if ev.kind == LEAVE:
+            next_leave.setdefault(ev.did, []).append(ev.t)
+    out: List[ChurnEvent] = []
+    for ev in events:
+        if ev.kind == JOIN:
+            later = [t for t in next_leave.get(ev.did, []) if t > ev.t]
+            until = min(later) if later else float("inf")
+            out.append(ChurnEvent(ev.t, ev.did, JOIN, until))
+        else:
+            out.append(ev)
+    return ChurnSchedule(events=tuple(out))
+
+
+def exponential_churn(
+    cluster: ClusterState,
+    *,
+    horizon: float,
+    seed: int = 0,
+    rejoin: bool = True,
+    mean_downtime: float = 20.0,
+    lams: Optional[Sequence[float]] = None,
+    resample_first: bool = False,
+) -> ChurnSchedule:
+    """Exponential leave/rejoin cycles for every device, up to ``horizon``.
+
+    Each device's first departure is its already-sampled ``alive_until``
+    (so the schedule agrees with the fleet's ground truth and with every
+    policy's Table-IV knowledge) unless ``resample_first`` — or the device
+    was built immortal — in which case a fresh lifetime is drawn from its
+    rate.  After a departure the device stays away ``Exp(mean_downtime)``
+    seconds, then rejoins with a fresh exponential lifetime (memoryless, as
+    the paper's model demands).  ``lams`` overrides the per-device rates —
+    the hook :func:`churn_from_monitor` uses to feed online MLE estimates
+    back into the generator.
+    """
+    rng = np.random.default_rng(seed)
+    events: List[ChurnEvent] = []
+    for d in cluster.devices:
+        lam = float(lams[d.did]) if lams is not None else float(d.lam)
+        if resample_first or not np.isfinite(d.alive_until):
+            t_leave = d.join_time + sample_lifetime(lam, rng)
+        else:
+            t_leave = float(d.alive_until)
+        while t_leave <= horizon:
+            events.append(ChurnEvent(t_leave, d.did, LEAVE))
+            if not rejoin:
+                break
+            t_join = t_leave + float(rng.exponential(mean_downtime))
+            if t_join > horizon:
+                break
+            t_leave = t_join + sample_lifetime(lam, rng)
+            events.append(ChurnEvent(t_join, d.did, JOIN))
+    return _finalize(events)
+
+
+def deterministic_churn(
+    events: Iterable[Tuple[float, int, str]]
+) -> ChurnSchedule:
+    """An explicit script of ``(t, did, "leave"|"join")`` transitions."""
+    out: List[ChurnEvent] = []
+    for t, did, kind in events:
+        if kind not in (LEAVE, JOIN):
+            raise ValueError(f"unknown churn event kind {kind!r}")
+        out.append(ChurnEvent(float(t), int(did), kind))
+    return _finalize(out)
+
+
+def trace_churn(
+    observations: Iterable[Tuple[float, int, bool]]
+) -> ChurnSchedule:
+    """Replay an availability trace: ``(t, did, alive)`` observations (the
+    campus-mobility-trace shape of §V-F).  A device emits a leave event
+    when its observed state flips up -> down and a join event on the flip
+    back; devices are assumed present before their first observation."""
+    state: Dict[int, bool] = {}
+    out: List[ChurnEvent] = []
+    for t, did, alive in sorted(observations, key=lambda o: (o[0], o[1])):
+        prev = state.get(did, True)
+        alive = bool(alive)
+        if prev and not alive:
+            out.append(ChurnEvent(float(t), int(did), LEAVE))
+        elif not prev and alive:
+            out.append(ChurnEvent(float(t), int(did), JOIN))
+        state[did] = alive
+    return _finalize(out)
+
+
+def churn_from_monitor(
+    monitor,
+    cluster: ClusterState,
+    *,
+    horizon: float,
+    cls_key=None,
+    **kwargs,
+) -> ChurnSchedule:
+    """Generate churn at the failure rates a
+    :class:`repro.ft.runtime.FleetMonitor` estimated online.
+
+    The monitor's per-class lambda MLE (deaths / alive-exposure — the same
+    :func:`~repro.core.availability.fit_failure_rate` estimator the paper
+    fits offline on the CrowdBind trace) replaces each device's nominal
+    Table-IV rate, so ``sim`` and ``ft`` share one availability model.
+    ``cls_key`` maps a sim :class:`~repro.core.cluster.Device` to the
+    monitor's class label (default: ``str(device.cls)``).
+    """
+    key = cls_key if cls_key is not None else (lambda d: str(d.cls))
+    lams = np.array([monitor.lam(key(d)) for d in cluster.devices])
+    return exponential_churn(
+        cluster, horizon=horizon, lams=lams, resample_first=True, **kwargs
+    )

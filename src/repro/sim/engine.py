@@ -21,22 +21,33 @@ Prefer driving the engine through :class:`repro.api.Orchestrator`
 
 Stage barrier: tasks of stage i+1 start only once every stage-i task has
 completed (Algorithm 1 line 44).  A task completes when any replica
-succeeds; an application instance fails as soon as any of its tasks has all
-replicas fail.
+succeeds; what happens when a task's LAST replica dies is the recovery
+strategy's call (:mod:`repro.core.recovery`): ``fail_fast`` fails the
+instance immediately (Eq. 4, the bit-identical default), ``failover``
+restarts the task on the best surviving device after a detection delay,
+``replan`` re-invokes the placement policy on the live sub-fleet.
+
+Churn runtime: pass a :class:`repro.sim.churn.ChurnSchedule` and the engine
+processes DEVICE_DOWN / DEVICE_UP events — a departing device kills its
+in-flight replicas on the spot (their remaining T_alloc occupancy is
+returned) and is masked out of every later placement's feasibility; a
+rejoining device comes back empty (fresh join time, cold model cache) and
+is re-admitted as placement capacity.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 from ..core.cluster import ClusterState
 from ..core.dag import AppDAG
-from ..core.orchestrator import Placement, Scheduler, orchestrate
+from ..core.orchestrator import Placement, Replica, Scheduler, orchestrate
 from ..core.policy import Policy, make_policy
+from ..core.recovery import RecoveryStrategy, make_recovery
 
 __all__ = ["InstanceRecord", "SimResult", "Engine"]
 
@@ -109,6 +120,16 @@ class _AppRun:
     done: Dict[str, bool] = field(default_factory=dict)
     started: set = field(default_factory=set)
     failed: bool = False
+    # -- churn / recovery state ------------------------------------------------
+    # replica ids of this instance still executing (engine._active keys)
+    live_rids: Set[int] = field(default_factory=set)
+    # per-task provisional-interval origin: a replanned task's occupancy was
+    # re-recorded by apply at ITS plan's timestamp, not the original one
+    origins: Dict[str, float] = field(default_factory=dict)
+    # per-task recovery attempts consumed (failover / replan budgets)
+    retries: Dict[str, int] = field(default_factory=dict)
+    # a replica of this instance died at some point (recovered-vs-lost stats)
+    touched: bool = False
 
 
 class Engine:
@@ -116,6 +137,9 @@ class Engine:
 
     ARRIVAL = 0
     TASK_END = 1
+    DEVICE_DOWN = 2
+    DEVICE_UP = 3
+    RECOVER = 4
 
     def __init__(
         self,
@@ -123,10 +147,23 @@ class Engine:
         scheduler,
         seed: int = 0,
         noise_sigma: float = 0.10,
+        churn=None,
+        recovery="fail_fast",
+        track_intervals: bool = False,
     ):
         """``scheduler`` may be a pure :class:`~repro.core.policy.Policy`, a
         registered policy name, or a legacy :class:`Scheduler` shim — every
-        placement is routed through ``orchestrate`` + ``cluster.apply``."""
+        placement is routed through ``orchestrate`` + ``cluster.apply``.
+
+        ``churn`` is an optional :class:`repro.sim.churn.ChurnSchedule`;
+        installing one makes the schedule the single source of truth for
+        device lifetimes (DEVICE_DOWN / DEVICE_UP events drive departures
+        and rejoins).  ``recovery`` names a registered
+        :class:`~repro.core.recovery.RecoveryStrategy` (or passes an
+        instance); the default ``fail_fast`` is bit-identical to the
+        pre-churn engine.  ``track_intervals`` records every replica's
+        actual execution span in :attr:`executed` so tests can prove the
+        occupancy bookkeeping nets to exactly the executed work."""
         self.cluster = cluster
         if isinstance(scheduler, str):
             scheduler = make_policy(scheduler, seed=seed)
@@ -134,6 +171,9 @@ class Engine:
             scheduler.policy if isinstance(scheduler, Scheduler) else scheduler
         )
         self.scheduler = scheduler
+        self.recovery: RecoveryStrategy = (
+            make_recovery(recovery) if isinstance(recovery, str) else recovery
+        )
         self.noise = np.random.default_rng(seed + 17)
         self.noise_sigma = noise_sigma
         self.events: List[Tuple[float, int, int, tuple]] = []
@@ -141,6 +181,25 @@ class Engine:
         self.records: List[InstanceRecord] = []
         self.load = np.zeros(cluster.n_devices, dtype=np.int64)
         self.now = 0.0
+        # in-flight replica registry: rid -> (run, tname, did, ttype, t0, t1)
+        self._active: Dict[int, tuple] = {}
+        self._dev_active: List[Set[int]] = [set() for _ in cluster.devices]
+        self._rid = itertools.count()
+        self.track_intervals = track_intervals
+        # (did, ttype, t0, t1, t_cut) actual execution spans; t_cut < t1
+        # marks a replica killed mid-flight (its tail occupancy returned)
+        self.executed: List[Tuple[int, int, float, float, float]] = []
+        self.replan_time = 0.0
+        self.stats: Dict[str, int] = {
+            "device_down": 0, "device_up": 0, "replica_deaths": 0,
+            "task_failovers": 0, "replans": 0, "recovered": 0, "lost": 0,
+        }
+        self.churn = churn or None      # False (churn forced off) == None
+        if self.churn is not None:
+            churn.install(cluster)
+            for ev in churn.events:
+                kind = self.DEVICE_DOWN if ev.kind == "leave" else self.DEVICE_UP
+                self._push(ev.t, kind, (ev.did, ev.until))
 
     # -- event helpers ----------------------------------------------------------
     def _push(self, t: float, kind: int, payload: tuple) -> None:
@@ -179,33 +238,64 @@ class Engine:
         cluster = self.cluster
         tp = run.placement.tasks[tname]
         spec = run.app.tasks[tname]
-        run.inflight[tname] = len(tp.replicas)
+        run.inflight[tname] = 0
         run.started.add(tname)
-        prov_start = run.plan_now + tp.est_start
+        prov_start = run.origins.get(tname, run.plan_now) + tp.est_start
         for rep in tp.replicas:
             # Replace the provisional T_alloc interval with the actual one.
             cluster.add_interval(
                 rep.did, spec.ttype, prov_start, prov_start + rep.est_total, w=-1.0
             )
-            counts = np.asarray(
-                cluster.device_counts_at(rep.did, self.now), dtype=np.float64
-            ).copy()
-            dev = cluster.devices[rep.did]
-            exec_t = cluster.model.estimate(dev.cls, spec.ttype, counts)
-            if self.noise_sigma > 0:
-                exec_t *= float(
-                    self.noise.lognormal(mean=0.0, sigma=self.noise_sigma)
-                )
-            dur = exec_t + rep.est_upload + rep.est_transfer
-            cluster.add_interval(rep.did, spec.ttype, self.now, self.now + dur)
-            self.load[rep.did] += 1
-            ok = (self.now + dur) <= dev.alive_until
-            self._push(self.now + dur, self.TASK_END, (run, tname, ok))
+            self._launch_replica(run, tname, rep)
 
-    def _task_end(self, run: _AppRun, tname: str, ok: bool) -> None:
+    def _launch_replica(self, run: _AppRun, tname: str, rep: Replica) -> None:
+        """Start one replica NOW: ground-truth duration from the actual
+        co-located counts (Eq. 1 + noise), actual T_alloc interval, and an
+        entry in the in-flight registry so a device departure can kill it."""
+        cluster = self.cluster
+        spec = run.app.tasks[tname]
+        counts = np.asarray(
+            cluster.device_counts_at(rep.did, self.now), dtype=np.float64
+        ).copy()
+        dev = cluster.devices[rep.did]
+        exec_t = cluster.model.estimate(dev.cls, spec.ttype, counts)
+        if self.noise_sigma > 0:
+            exec_t *= float(
+                self.noise.lognormal(mean=0.0, sigma=self.noise_sigma)
+            )
+        dur = exec_t + rep.est_upload + rep.est_transfer
+        cluster.add_interval(rep.did, spec.ttype, self.now, self.now + dur)
+        self.load[rep.did] += 1
+        run.inflight[tname] = run.inflight.get(tname, 0) + 1
+        rid = next(self._rid)
+        self._active[rid] = (
+            run, tname, rep.did, spec.ttype, self.now, self.now + dur
+        )
+        self._dev_active[rep.did].add(rid)
+        run.live_rids.add(rid)
+        ok = (self.now + dur) <= dev.alive_until
+        self._push(self.now + dur, self.TASK_END, (run, tname, rid, ok))
+
+    def _retire_replica(self, rid: int, info: tuple) -> None:
+        """Drop one replica from the in-flight registries."""
+        run, _tname, did, _ttype, _t0, _t1 = info
+        self._dev_active[did].discard(rid)
+        run.live_rids.discard(rid)
+
+    def _task_end(self, run: _AppRun, tname: str, rid: int, ok: bool) -> None:
+        info = self._active.pop(rid, None)
+        if info is None:
+            return          # replica was killed (device departure/app failure)
+        self._retire_replica(rid, info)
+        if self.track_intervals:
+            _, _, did, ttype, t0, t1 = info
+            self.executed.append((did, ttype, t0, t1, t1))
         if run.failed or run.done.get(tname, False):
             return
         run.inflight[tname] -= 1
+        if not ok:
+            run.touched = True
+            self.stats["replica_deaths"] += 1
         if ok:
             run.done[tname] = True
             run.stage_pending -= 1
@@ -213,30 +303,92 @@ class Engine:
                 run.stage_idx += 1
                 self._start_stage(run)
         elif run.inflight[tname] == 0:
-            # every replica failed -> application instance fails (Eq. 4)
-            self._finish_app(run, failed=True)
+            # every replica failed -> the recovery strategy decides the
+            # instance's fate (fail_fast == Eq. 4: fail immediately)
+            self.recovery.on_task_dead(self, run, tname)
+
+    # -- churn runtime ----------------------------------------------------------
+    def _device_down(self, did: int) -> None:
+        """A device departs: mask it out of future placements and kill its
+        in-flight replicas on the spot — their remaining occupancy is
+        returned to T_alloc and each affected task is routed through the
+        recovery strategy when it just lost its last replica."""
+        self.stats["device_down"] += 1
+        self.cluster.mark_down(did, self.now)
+        dead: List[Tuple[int, tuple]] = [
+            (rid, self._active.pop(rid)) for rid in sorted(self._dev_active[did])
+        ]
+        for rid, info in dead:
+            run, tname, _did, ttype, t0, t1 = info
+            self._retire_replica(rid, info)
+            self.cluster.cancel_from(did, ttype, t0, t1, self.now)
+            if self.track_intervals:
+                self.executed.append((did, ttype, t0, t1, self.now))
+            if run.failed or run.done.get(tname, False):
+                continue
+            run.touched = True
+            self.stats["replica_deaths"] += 1
+            run.inflight[tname] -= 1
+            if run.inflight[tname] == 0:
+                self.recovery.on_task_dead(self, run, tname)
+
+    def _device_up(self, did: int, until: float) -> None:
+        """A device rejoins empty (fresh join time, cold caches) and is
+        re-admitted as placement capacity until its next departure."""
+        self.stats["device_up"] += 1
+        self.cluster.mark_up(did, self.now, alive_until=until)
+
+    def schedule_recovery(self, run: _AppRun, tname: str, t: float) -> None:
+        """Recovery-strategy hook: fire ``recovery.recover(run, tname)`` at
+        absolute time ``t`` (death + detection delay)."""
+        self._push(t, self.RECOVER, (run, tname))
 
     def _finish_app(self, run: _AppRun, failed: bool) -> None:
         if not np.isnan(run.rec.finished):
             return
         if failed:
-            self._cancel_unstarted(run)
+            self._cancel_running(run)
+            self._cancel_provisional(run)
         run.failed = failed
         run.rec.failed = failed
         run.rec.finished = self.now
         run.rec.service_time = self.now - run.rec.arrival
+        if failed:
+            self.stats["lost"] += 1
+        elif run.touched:
+            self.stats["recovered"] += 1
 
-    def _cancel_unstarted(self, run: _AppRun) -> None:
-        """A failed app never reaches its later stages: remove their
-        provisional T_alloc intervals (recorded by ``apply`` at
-        ``plan.now + est_start``) so no ghost occupancy survives to corrupt
-        later Eq. (1) estimates."""
+    def _cancel_running(self, run: _AppRun) -> None:
+        """A failed app's still-executing sibling replicas (other in-flight
+        tasks of the same instance) produce output nobody will consume:
+        return their unfinished occupancy so they stop distorting Eq. (1)
+        estimates for everyone else."""
+        for rid in sorted(run.live_rids):
+            info = self._active.pop(rid, None)
+            if info is None:
+                continue
+            _, _tname, did, ttype, t0, t1 = info
+            self._dev_active[did].discard(rid)
+            self.cluster.cancel_from(did, ttype, t0, t1, self.now)
+            if self.track_intervals:
+                self.executed.append((did, ttype, t0, t1, self.now))
+        run.live_rids.clear()
+
+    def _cancel_provisional(
+        self, run: _AppRun, tasks: Optional[List[str]] = None
+    ) -> None:
+        """Remove the provisional T_alloc intervals of not-yet-started tasks
+        (recorded by ``apply`` at each task's plan origin + est_start) so no
+        ghost occupancy survives — on app failure (every unstarted task) or
+        on a replan (the tasks about to be re-planned)."""
         cluster = self.cluster
-        for tname, tp in run.placement.tasks.items():
+        names = tasks if tasks is not None else list(run.placement.tasks)
+        for tname in names:
             if tname in run.started:
                 continue
+            tp = run.placement.tasks[tname]
             spec = run.app.tasks[tname]
-            start = run.plan_now + tp.est_start
+            start = run.origins.get(tname, run.plan_now) + tp.est_start
             for rep in tp.replicas:
                 cluster.add_interval(
                     rep.did, spec.ttype, start, start + rep.est_total, w=-1.0
@@ -271,9 +423,17 @@ class Engine:
                 run = _AppRun(rec=rec, app=app, placement=placement,
                               plan_now=plan.now)
                 self._start_stage(run)
-            else:
-                run, tname, ok = payload
-                self._task_end(run, tname, ok)
+            elif kind == self.TASK_END:
+                run, tname, rid, ok = payload
+                self._task_end(run, tname, rid, ok)
+            elif kind == self.DEVICE_DOWN:
+                self._device_down(payload[0])
+            elif kind == self.DEVICE_UP:
+                self._device_up(payload[0], payload[1])
+            else:                                   # RECOVER
+                run, tname = payload
+                if not run.failed and not run.done.get(tname, False):
+                    self.recovery.recover(self, run, tname)
         self.now = until
 
     def drain(self) -> None:

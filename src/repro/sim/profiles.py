@@ -48,6 +48,8 @@ __all__ = [
     "MULTI_TIER_SPECS",
     "DEFAULT_BACKHAUL",
     "SCENARIOS",
+    "CHURN_LAMBDA_SCALE",
+    "LAMBDA_CHURN",
 ]
 
 MB = 1e6
@@ -113,14 +115,26 @@ TASK_TYPES: Tuple[TaskType, ...] = (
 
 N_TYPES = len(TASK_TYPES)
 
+# The churn scenario's per-class failure rates: the PED (personal edge
+# device) rates of Table IV scaled so that departures — and, with the churn
+# runtime's rejoin cycles, re-admissions — actually happen inside the
+# evaluation window (mean lifetimes drop from hours to ~1.5-10 minutes,
+# the "campus corridor at class change" regime of the §V-F mobility trace).
+CHURN_LAMBDA_SCALE = 12.0
+LAMBDA_CHURN = LAMBDA_PED * CHURN_LAMBDA_SCALE
+
 # Scenario name -> per-class failure rates (paper Table IV).  The extra
 # "multi_tier" scenario (device -> edge server -> cloud fleet with the
 # tier-aware link matrix; see make_multi_tier_cluster) is dispatched by
 # make_cluster directly and has per-TIER rates in MULTI_TIER_SPECS.
+# "churn" pairs the scaled-PED fleet with the churn runtime: the runner
+# generates a leave/rejoin event stream over it (repro.sim.churn) and the
+# engine reacts through the configured recovery strategy.
 SCENARIOS: Dict[str, np.ndarray] = {
     "mix": LAMBDA_MIX,
     "ced": LAMBDA_CED,
     "ped": LAMBDA_PED,
+    "churn": LAMBDA_CHURN,
 }
 
 

@@ -64,6 +64,21 @@ class SimConfig:
     # Plan each cycle's burst in one fused `orchestrate_batch` wave (all
     # plans share the cycle-start fleet snapshot) instead of per arrival.
     fused_burst: bool = False
+    # -- churn runtime (repro.sim.churn + repro.core.recovery) -----------------
+    # Recovery strategy when a task loses its last replica: "fail_fast"
+    # (Eq. 4, bit-identical to the seed engine), "failover", or "replan".
+    recovery: str = "fail_fast"
+    # None = churn auto-enables for scenario "churn" only; True/False forces.
+    churn: Optional[bool] = None
+    churn_seed: Optional[int] = None    # None = seed + 101
+    rejoin: bool = True                 # departed devices rejoin after downtime
+    mean_downtime: float = 20.0         # Exp() mean seconds away per departure
+    detection_delay: float = 0.25       # missed-heartbeat detection lag
+    max_retries: int = 2                # failover/replan attempts per task
+
+    @property
+    def churn_enabled(self) -> bool:
+        return self.churn if self.churn is not None else self.scenario == "churn"
 
     @property
     def horizon(self) -> float:
@@ -121,9 +136,22 @@ def run_one(
         profile, scenario=cfg.scenario, n_devices=cfg.n_devices, seed=cfg.seed,
         horizon=cfg.horizon + 30.0,
     )
+    churn = None
+    if cfg.churn_enabled:
+        from .churn import exponential_churn  # lazy: keeps import graph flat
+
+        churn = exponential_churn(
+            cluster,
+            horizon=cfg.horizon + 25.0,
+            seed=cfg.seed + 101 if cfg.churn_seed is None else cfg.churn_seed,
+            rejoin=cfg.rejoin,
+            mean_downtime=cfg.mean_downtime,
+        )
     orch = Orchestrator(
         cluster, policy_for(scheme, profile, cfg),
         seed=cfg.seed, noise_sigma=cfg.noise_sigma,
+        churn=churn, recovery=cfg.recovery,
+        detection_delay=cfg.detection_delay, max_retries=cfg.max_retries,
     )
     apps, times = _make_workload(cfg)
     if cfg.fused_burst:

@@ -125,7 +125,7 @@ def test_fleet_snapshot_is_a_pytree():
     _jax()  # registers the pytree nodes
     snap = small_cluster(n=3).snapshot(0.0)
     leaves, treedef = jax.tree_util.tree_flatten(snap)
-    assert len(leaves) == 12                 # + tiers, link_bw (PR 3)
+    assert len(leaves) == 13                 # + tiers, link_bw (PR 3), alive (PR 4)
     again = jax.tree_util.tree_unflatten(treedef, leaves)
     assert isinstance(again, FleetSnapshot)
     assert np.array_equal(again.lams, snap.lams)
