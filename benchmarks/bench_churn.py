@@ -1,23 +1,32 @@
-"""Churn recovery: recovered-vs-lost instances and replan throughput.
+"""Churn recovery + churn-aware planning: recovered/lost/salvaged instances
+and the forecast-aware-vs-memoryless placement race.
 
-Runs the ``churn`` scenario (scaled-PED fleet + exponential leave/rejoin
-event stream, ``repro.sim.churn``) for each recovery strategy and two
-schemes:
+Two scenario columns:
 
-  * ``lavea`` — no proactive replication, so every device departure that
-    catches a task in flight is a potential instance loss: the cleanest
-    view of what detection + recovery buys.  ``failover`` and ``replan``
-    must strictly reduce P_f vs ``fail_fast`` here (the PR's acceptance
-    gate).
-  * ``ibdash`` — Algorithm 1's pf-aware placement + replication absorbs
-    this churn level on its own (the paper's core claim); reported so the
-    proactive-vs-reactive comparison is on the record.
+  * ``churn`` (exponential leave/rejoin streams) for each recovery strategy
+    and two schemes:
+      - ``lavea`` — no proactive replication, so every device departure that
+        catches a task in flight is a potential instance loss: the cleanest
+        view of what detection + recovery buys.  ``failover`` and ``replan``
+        must strictly reduce P_f vs ``fail_fast`` (the PR-4 gate).
+      - ``ibdash`` — Algorithm 1's pf-aware placement + replication absorbs
+        this churn level on its own (the paper's core claim).
+  * ``correlated`` (per-group shared shocks + rotating scripted maintenance
+    windows, ``repro.sim.churn.correlated_churn``) racing registry
+    ``ibdash`` against the forecast-aware ``churn_aware`` under
+    ``fail_fast`` (raw P_f), ``fail_fast`` + partial-result salvage
+    (salvaged-instance counts), and ``replan`` + salvage (everything on —
+    both recover every instance, so its service time is the fair E2E
+    latency comparison with no survivorship bias).  Gates: ``churn_aware``
+    strictly beats ``ibdash`` on P_f, is no worse on E2E latency, and
+    salvage strictly reduces ``ibdash``'s losses.
 
 Writes ``BENCH_churn.json``; ``--check BASELINE.json`` exits non-zero when
-the recovered-instance rate drops below the committed baseline (the sim is
-seeded, so the counts are deterministic — the tolerance only covers library
-drift) or replan throughput regresses more than 3x (wall-clock, so the
-factor is generous for runner-hardware variance).
+any gate fails, the recovered-instance rate drops below the committed
+baseline (the sim is seeded, so the counts are deterministic — the
+tolerance only covers library drift) or replan throughput regresses more
+than 3x (wall-clock, so the factor is generous for runner-hardware
+variance).
 
     PYTHONPATH=src python -m benchmarks.bench_churn \
         [--out BENCH_churn.json] [--check benchmarks/BENCH_churn.baseline.json]
@@ -37,34 +46,40 @@ GATED_SCHEME = "lavea"
 RATE_TOLERANCE = 0.05          # recovered-rate slack vs baseline
 THROUGHPUT_FACTOR = 3.0        # replan/s regression factor (hw-portable-ish)
 
+# correlated column: scheme x (recovery, salvage attempts)
+CORR_SCHEMES = ("ibdash", "churn_aware")
+CORR_MODES = (
+    ("fail_fast", 0),          # raw forecast win (P_f gate)
+    ("fail_fast_salvage", 1),  # salvage alone (salvaged-count gate)
+    ("replan", 1),             # everything on (E2E latency gate)
+)
+LATENCY_TOLERANCE = 1.02       # churn_aware svc <= ibdash svc * this
 
-def _config():
+
+def _config(scenario: str = "churn"):
     from repro.sim import SimConfig
 
     return SimConfig(
-        scenario="churn", n_cycles=4, instances_per_cycle=400,
+        scenario=scenario, n_cycles=4, instances_per_cycle=400,
         n_devices=100, seed=0,
     )
 
 
-def measure(scheme: str, recovery: str, profile, cfg) -> dict:
+def measure(scheme: str, recovery: str, profile, cfg, salvage: int = 0) -> dict:
     from repro.api import Orchestrator
     from repro.sim import make_cluster
-    from repro.sim.churn import exponential_churn
-    from repro.sim.runner import _make_workload, policy_for
+    from repro.sim.runner import _make_workload, make_churn, policy_for
 
     cluster = make_cluster(
         profile, scenario=cfg.scenario, n_devices=cfg.n_devices,
         seed=cfg.seed, horizon=cfg.horizon + 30.0,
     )
-    churn = exponential_churn(
-        cluster, horizon=cfg.horizon + 25.0, seed=cfg.seed + 101,
-        rejoin=cfg.rejoin, mean_downtime=cfg.mean_downtime,
-    )
+    churn = make_churn(cfg, cluster)
     orch = Orchestrator(
         cluster, policy_for(scheme, profile, cfg), seed=cfg.seed,
         noise_sigma=cfg.noise_sigma, churn=churn, recovery=recovery,
-        detection_delay=cfg.detection_delay, max_retries=cfg.max_retries,
+        salvage=salvage, detection_delay=cfg.detection_delay,
+        max_retries=cfg.max_retries,
     )
     apps, times = _make_workload(cfg)
     orch.submit_batch(apps, times)
@@ -84,6 +99,8 @@ def measure(scheme: str, recovery: str, profile, cfg) -> dict:
         "device_up": stats["device_up"],
         "task_failovers": stats["task_failovers"],
         "replans": stats["replans"],
+        "salvages": stats["salvages"],
+        "salvaged": stats["salvaged"],
         "replan_time_s": eng.replan_time,
         "replans_per_sec": (
             stats["replans"] / eng.replan_time if eng.replan_time > 0 else 0.0
@@ -96,6 +113,7 @@ def full_report() -> dict:
     from repro.sim import make_profile
 
     cfg = _config()
+    corr_cfg = _config("correlated_churn")
     profile = make_profile(seed=cfg.seed)
     report = {
         "config": {
@@ -105,6 +123,12 @@ def full_report() -> dict:
             "mean_downtime": cfg.mean_downtime,
             "detection_delay": cfg.detection_delay,
             "max_retries": cfg.max_retries,
+            "correlated": {
+                "churn_groups": corr_cfg.churn_groups,
+                "shock_rate": corr_cfg.shock_rate,
+                "maintenance_period": corr_cfg.maintenance_period,
+                "maintenance_duration": corr_cfg.maintenance_duration,
+            },
         },
         "results": {
             scheme: {
@@ -112,6 +136,16 @@ def full_report() -> dict:
                 for recovery in RECOVERIES
             }
             for scheme in SCHEMES
+        },
+        "correlated": {
+            scheme: {
+                mode: measure(
+                    scheme, mode.replace("_salvage", ""), profile, corr_cfg,
+                    salvage=salvage,
+                )
+                for mode, salvage in CORR_MODES
+            }
+            for scheme in CORR_SCHEMES
         },
     }
     return report
@@ -124,7 +158,12 @@ def check(report: dict, baseline_path: str) -> int:
     * ``failover`` and ``replan`` must strictly reduce P_f vs ``fail_fast``
       and keep their recovered-instance rate within RATE_TOLERANCE of the
       baseline (counts are deterministic given the seed);
-    * replan throughput must stay within THROUGHPUT_FACTOR of baseline.
+    * replan throughput must stay within THROUGHPUT_FACTOR of baseline;
+    * on the correlated scenario, ``churn_aware`` must strictly beat
+      registry ``ibdash`` on P_f (fail_fast rows), be no worse on E2E
+      latency (replan rows, where both recover everything), and salvage
+      must strictly reduce ``ibdash``'s instance losses while actually
+      salvaging instances.
     """
     with open(baseline_path) as f:
         baseline = json.load(f)
@@ -158,6 +197,45 @@ def check(report: dict, baseline_path: str) -> int:
             f"{base_tp / THROUGHPUT_FACTOR:.1f} "
             f"(baseline {base_tp:.1f} / {THROUGHPUT_FACTOR})"
         )
+
+    # -- correlated scenario: the churn-aware acceptance gates ----------------
+    corr = report["correlated"]
+    ib, ca = corr["ibdash"], corr["churn_aware"]
+    if ib["fail_fast"]["lost"] == 0:
+        failures.append(
+            "correlated/ibdash/fail_fast: no instances lost — the "
+            "correlated scenario no longer stresses placement"
+        )
+    if ca["fail_fast"]["prob_failure"] >= ib["fail_fast"]["prob_failure"]:
+        failures.append(
+            "correlated: churn_aware P_f "
+            f"{ca['fail_fast']['prob_failure']:.4f} >= ibdash "
+            f"{ib['fail_fast']['prob_failure']:.4f} — the forecast no "
+            "longer beats memoryless pricing"
+        )
+    if ca["replan"]["prob_failure"] > ib["replan"]["prob_failure"]:
+        failures.append(
+            "correlated/replan: churn_aware P_f "
+            f"{ca['replan']['prob_failure']:.4f} > ibdash "
+            f"{ib['replan']['prob_failure']:.4f}"
+        )
+    lat_ca = ca["replan"]["avg_service_time"]
+    lat_ib = ib["replan"]["avg_service_time"]
+    if lat_ca > lat_ib * LATENCY_TOLERANCE:
+        failures.append(
+            f"correlated/replan: churn_aware E2E latency {lat_ca:.3f}s > "
+            f"ibdash {lat_ib:.3f}s * {LATENCY_TOLERANCE}"
+        )
+    salv = ib["fail_fast_salvage"]
+    if salv["salvaged"] == 0:
+        failures.append(
+            "correlated/ibdash/fail_fast_salvage: no instance was salvaged"
+        )
+    if salv["lost"] >= ib["fail_fast"]["lost"]:
+        failures.append(
+            f"correlated/ibdash: salvage did not reduce losses "
+            f"({salv['lost']} >= {ib['fail_fast']['lost']})"
+        )
     for msg in failures:
         print(f"REGRESSION {msg}", file=sys.stderr)
     return 1 if failures else 0
@@ -172,6 +250,12 @@ def run(ctx) -> None:
             ctx.emit(f"{key}_pf", row["prob_failure"])
             ctx.emit(f"{key}_recovered", row["recovered"])
             ctx.emit(f"{key}_lost", row["lost"])
+    for scheme, rows in report["correlated"].items():
+        for mode, row in rows.items():
+            key = f"corr_{scheme}_{mode}"
+            ctx.emit(f"{key}_pf", row["prob_failure"])
+            ctx.emit(f"{key}_svc", row["avg_service_time"])
+            ctx.emit(f"{key}_salvaged", row["salvaged"])
     ctx.emit(
         "churn_replan_per_sec",
         report["results"][GATED_SCHEME]["replan"]["replans_per_sec"],
@@ -197,6 +281,14 @@ def main() -> None:
                 f"deaths {row['replica_deaths']:4d}  "
                 f"replans {row['replans']:3d} "
                 f"({row['replans_per_sec']:7.1f}/s)"
+            )
+    print("-- correlated (shared shocks + maintenance windows) --")
+    for scheme, rows in report["correlated"].items():
+        for mode, row in rows.items():
+            print(
+                f"{scheme:12s} {mode:18s}  P_f {row['prob_failure']:.4f}  "
+                f"svc {row['avg_service_time']:.3f}s  "
+                f"lost {row['lost']:4d}  salvaged {row['salvaged']:3d}"
             )
     if args.check:
         sys.exit(check(report, args.check))

@@ -135,16 +135,23 @@ class Orchestrator:
         recovery: Union[str, RecoveryStrategy] = "fail_fast",
         detection_delay: Optional[float] = None,
         max_retries: Optional[int] = None,
+        salvage: int = 0,
         track_intervals: bool = False,
         **policy_kwargs,
     ):
         """``churn`` takes a :class:`repro.sim.churn.ChurnSchedule`: the
         engine then processes DEVICE_DOWN / DEVICE_UP events (in-flight
         replicas on a departing device are killed, capacity is returned and
-        later re-admitted on rejoin).  ``recovery`` names the registered
+        later re-admitted on rejoin), and the schedule's forecastable side
+        (scripted windows, MLE rates) is installed as the cluster's
+        availability forecast — the ``churn_aware`` policy's input.
+        ``recovery`` names the registered
         :class:`~repro.core.recovery.RecoveryStrategy` applied when a task
         loses its last replica — ``fail_fast`` (the default) is
-        bit-identical to the pre-churn engine."""
+        bit-identical to the pre-churn engine.  ``salvage`` bounds
+        partial-result salvage resubmissions per instance: a lost instance
+        with completed stages is re-planned through
+        ``orchestrate(pinned=...)`` instead of discarded (0 = off)."""
         if isinstance(policy, str):
             policy = make_policy(policy, seed=seed, **policy_kwargs)
         recovery_kw = {
@@ -164,7 +171,8 @@ class Orchestrator:
         self.policy = policy
         self.engine = Engine(
             cluster, policy, seed=seed, noise_sigma=noise_sigma,
-            churn=churn, recovery=recovery, track_intervals=track_intervals,
+            churn=churn, recovery=recovery, salvage=salvage,
+            track_intervals=track_intervals,
         )
 
     # -- online interface -------------------------------------------------------
@@ -253,7 +261,9 @@ class Orchestrator:
     def stats(self) -> dict:
         """Churn-runtime counters: device_down/device_up, replica_deaths,
         task_failovers, replans, recovered (instances that survived a
-        replica death) and lost (instances that failed)."""
+        replica death), lost (instances that failed), salvages
+        (partial-result resubmissions) and salvaged (instances that
+        completed after at least one salvage)."""
         return self.engine.stats
 
 
@@ -274,6 +284,11 @@ _LAZY = {
     "deterministic_churn": ("repro.sim.churn", "deterministic_churn"),
     "trace_churn": ("repro.sim.churn", "trace_churn"),
     "churn_from_monitor": ("repro.sim.churn", "churn_from_monitor"),
+    "maintenance_windows": ("repro.sim.churn", "maintenance_windows"),
+    "correlated_churn": ("repro.sim.churn", "correlated_churn"),
+    "periodic_windows": ("repro.sim.churn", "periodic_windows"),
+    "device_groups": ("repro.sim.churn", "device_groups"),
+    "SurvivalForecast": ("repro.core.availability", "SurvivalForecast"),
 }
 
 

@@ -19,6 +19,7 @@ production decisions:
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import cached_property
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
@@ -30,6 +31,7 @@ __all__ = [
     "fit_failure_rate",
     "young_daly_interval",
     "expected_makespan_with_restarts",
+    "SurvivalForecast",
     "LAMBDA_MIX",
     "LAMBDA_CED",
     "LAMBDA_PED",
@@ -90,6 +92,99 @@ def fit_failure_rate(
     if exposure <= 0:
         raise ValueError("no exposure time in trace")
     return deaths / exposure
+
+
+@dataclass(frozen=True)
+class SurvivalForecast:
+    """Per-device availability forecast: ``S_d(t, t + h)`` = probability that
+    device ``d`` stays up throughout the span ``[t, t + h]`` given everything
+    predictable at ``t``.
+
+    The paper prices every future failure through the memoryless ``F(T_i)``
+    term, yet personal-device departures are often *announced* (a maintenance
+    calendar, a lecture timetable) — the mobility-aware orchestration line
+    (arXiv:2110.07808) plans around exactly such forecastable departures.
+    This object separates the two hazard components:
+
+      * ``departures`` — per-device sorted KNOWN future departure times
+        (scripted maintenance windows, calendars, trace replays).  Exact: a
+        span reaching past the next known departure has survival 0.
+      * ``lams`` — per-device residual stochastic hazard rates for the
+        *unpredictable* component (MLE-extrapolated: individual exponential
+        churn, shared-shock rates).  ``None`` = no stochastic hazard.
+
+    A forecast is installed on a :class:`~repro.core.cluster.ClusterState`
+    (usually by ``ChurnSchedule.install``) and surfaces to policies two ways:
+    sampled on a ``(K,)`` horizon grid as the ``surv_grid``/``survival``
+    :class:`FleetSnapshot` pytree leaves, and — exactly, per candidate — as
+    the ``survival`` column of the policy contexts, evaluated over each
+    task's estimated execution span.  The ``churn_aware`` policy replaces the
+    memoryless ``pf`` with ``1 - S_d`` where the forecast knows better.
+    """
+
+    departures: Tuple[Tuple[float, ...], ...]   # per-device sorted times
+    lams: Optional[Tuple[float, ...]] = None    # (D,) stochastic rates
+    horizon: float = 30.0                       # grid span for sample()
+    n_points: int = 16                          # grid resolution K
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.departures)
+
+    @staticmethod
+    def from_rates(lams: Sequence[float], **kwargs) -> "SurvivalForecast":
+        """Pure-stochastic forecast (no scripted departures known)."""
+        lams = tuple(float(l) for l in lams)
+        return SurvivalForecast(
+            departures=((),) * len(lams), lams=lams, **kwargs
+        )
+
+    @cached_property
+    def _lams_arr(self) -> Optional[np.ndarray]:
+        if self.lams is None:
+            return None
+        return np.asarray(self.lams, dtype=np.float64)
+
+    def next_departure(self, t: float) -> np.ndarray:
+        """(D,) first known departure strictly after ``t`` (+inf if none).
+        A departure exactly at ``t`` is already visible as the device being
+        down (``alive_mask``), so it does not bound future spans."""
+        out = np.full(self.n_devices, np.inf)
+        for d, deps in enumerate(self.departures):
+            for tl in deps:                 # sorted: first hit wins
+                if tl > t:
+                    out[d] = tl
+                    break
+        return out
+
+    def survival(self, t: float, spans: np.ndarray) -> np.ndarray:
+        """(D,) survival over per-device spans: ``S_d(t, t + spans[d])``.
+
+        Exact for the scripted component — survival is 1.0 up to (and
+        including: the engine's ``ok = completion <= alive_until``) the next
+        known departure, 0.0 past it — times the extrapolated stochastic
+        survival ``exp(-lam_d * span)``."""
+        spans = np.maximum(np.asarray(spans, dtype=np.float64), 0.0)
+        if self._lams_arr is not None:
+            s = np.exp(-self._lams_arr * spans)
+        else:
+            s = np.ones(self.n_devices)
+        return np.where(t + spans <= self.next_departure(t), s, 0.0)
+
+    def grid(self) -> np.ndarray:
+        """(K,) span offsets the sampled tensor is evaluated at."""
+        return np.linspace(0.0, self.horizon, self.n_points)
+
+    def sample(self, t: float) -> np.ndarray:
+        """(D, K) survival tensor over the horizon grid at instant ``t`` —
+        the :class:`FleetSnapshot` ``survival`` leaf."""
+        g = self.grid()
+        if self._lams_arr is not None:
+            s = np.exp(-self._lams_arr[:, None] * g[None, :])
+        else:
+            s = np.ones((self.n_devices, g.shape[0]))
+        nxt = self.next_departure(t)
+        return np.where(t + g[None, :] <= nxt[:, None], s, 0.0)
 
 
 def young_daly_interval(lam: float, ckpt_cost: float) -> float:

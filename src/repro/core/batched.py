@@ -79,6 +79,12 @@ class FleetSnapshot:
     mem_total: np.ndarray    # (D,) H(ED) in bytes (memory-feasibility data)
     join_times: np.ndarray   # (D,) device join times
     alive: np.ndarray        # (D,) bool: not yet departed at t (churn mask)
+    # Availability forecast sampled at t: survival[d, k] = P(device d stays
+    # up throughout [t, t + surv_grid[k]]) — exact for scripted maintenance
+    # windows, MLE-extrapolated for stochastic churn.  With no forecast
+    # installed the leaves are the uniform (K=1) all-ones tensor.
+    surv_grid: np.ndarray    # (K,) span offsets of the forecast grid
+    survival: np.ndarray     # (D, K) survival probabilities over the grid
     counts: np.ndarray       # (D, N) Task_info at t
     queue_len: np.ndarray    # (D,) total running tasks per device
     base: np.ndarray         # (P, N) ED_mc base latencies c[p, i]
@@ -128,6 +134,11 @@ class BatchedPolicyContext:
     total_pool: np.ndarray       # (G, D) Eq. (2): exec + upload + transfer
     feasible_pool: np.ndarray    # (G, D) bool memory-feasibility mask
     pf_pool: np.ndarray          # (G, D) F(T_i) per device
+    # Per-candidate forecast survival over each row's estimated execution
+    # span: S_d(t_start, t_start + total[g, d]), evaluated EXACTLY from the
+    # installed forecast (all-ones when none is installed, so policies fall
+    # back bit-identically to the memoryless pf column).
+    survival_pool: np.ndarray    # (G, D)
     # Task_info snapshots are pooled separately by T_alloc bucket.
     counts_pool: np.ndarray      # (Gc, D, N) distinct Task_info snapshots
     queue_pool: np.ndarray       # (Gc, D) their queue lengths
@@ -173,6 +184,11 @@ class BatchedPolicyContext:
     @cached_property
     def pf(self) -> np.ndarray:
         return self._expand(self.pf_pool, self.row_pool)
+
+    @cached_property
+    def survival(self) -> np.ndarray:
+        """(B, D) per-candidate forecast survival over each row's span."""
+        return self._expand(self.survival_pool, self.row_pool)
 
     @cached_property
     def counts(self) -> np.ndarray:
@@ -290,6 +306,7 @@ class BatchedPolicyContext:
             classes=self.fleet.classes,
             tiers=self.fleet.tiers,
             alive=self.fleet.alive,
+            survival=self.survival_pool[g],
         )
 
 

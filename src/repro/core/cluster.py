@@ -157,6 +157,11 @@ class ClusterState:
     def __post_init__(self) -> None:
         for d in self.devices:
             d.init_dynamic()
+        # Optional availability forecast (repro.core.availability
+        # .SurvivalForecast), installed by ChurnSchedule.install or
+        # install_forecast; None = no forecast -> snapshots carry the
+        # uniform all-ones survival leaf and policies fall back to F(T_i).
+        self.forecast = None
         self.topology_version = -1
         self.refresh_topology()
         self.n_buckets = int(np.ceil(self.horizon / self.dt)) + 1
@@ -227,6 +232,21 @@ class ClusterState:
         if up is not None or down is not None:
             d.bandwidth = float(min(d.up_bw, d.down_bw))
         self.refresh_topology()
+
+    def install_forecast(self, forecast) -> None:
+        """Install (or clear, with ``None``) an availability forecast
+        (:class:`~repro.core.availability.SurvivalForecast`).  Snapshots
+        taken afterwards carry its ``(D, K)`` survival tensor as the
+        ``surv_grid``/``survival`` pytree leaves and the wave context
+        builder prices per-candidate survival from it; the topology version
+        bumps so a live wave builder raises instead of mixing forecasts."""
+        if forecast is not None and forecast.n_devices != len(self.devices):
+            raise ValueError(
+                f"forecast covers {forecast.n_devices} devices, fleet has "
+                f"{len(self.devices)}"
+            )
+        self.forecast = forecast
+        self.topology_version += 1
 
     # -- device lifecycle (the churn runtime's view) ----------------------------
     def alive_mask(self, t: float) -> np.ndarray:
@@ -404,20 +424,31 @@ class ClusterState:
         counts: Optional[np.ndarray] = None,
         join_times: Optional[np.ndarray] = None,
         alive: Optional[np.ndarray] = None,
+        surv_grid: Optional[np.ndarray] = None,
+        survival: Optional[np.ndarray] = None,
     ) -> FleetSnapshot:
         """Struct-of-arrays :class:`FleetSnapshot` of the fleet at time
         ``t``: the static device vectors plus the Task_info counts — the
         batched policies' whole world view, as one pytree.
 
-        ``counts``/``join_times`` let hot callers (the wave context
-        builder) pass their cached copies; this stays the single
-        construction site for snapshots."""
+        ``counts``/``join_times``/``surv_grid``/``survival`` let hot callers
+        (the wave context builder) pass their cached copies; this stays the
+        single construction site for snapshots."""
         if counts is None:
             counts = np.asarray(self.counts_at(t), dtype=np.float64)
         if join_times is None:
             join_times = np.array([d.join_time for d in self.devices])
         if alive is None:
             alive = self.alive_mask(t)
+        if survival is None:
+            if self.forecast is None:
+                # no forecast installed: the uniform leaf — every policy
+                # falls back bit-identically to the memoryless F(T_i)
+                surv_grid = np.zeros(1)
+                survival = np.ones((len(self.devices), 1))
+            else:
+                surv_grid = self.forecast.grid()
+                survival = self.forecast.sample(t)
         return FleetSnapshot(
             t=t,
             classes=self._classes,
@@ -428,6 +459,8 @@ class ClusterState:
             mem_total=self._mem_total,
             join_times=join_times,
             alive=alive,
+            surv_grid=surv_grid,
+            survival=survival,
             counts=counts,
             queue_len=counts.sum(axis=1),
             base=self.model.base,

@@ -215,6 +215,11 @@ class _WaveContextBuilder:
         # for the whole wave — churn events cannot fire inside one pure
         # planning call (and would bump topology_version if they did).
         self.alive = np.asarray(cluster.alive_mask(float(now)), dtype=bool)
+        # Installed availability forecast (None = uniform survival): per-
+        # candidate survival over each task's span is priced EXACTLY from
+        # it (the sampled snapshot tensor is only the pytree representation).
+        self.forecast = getattr(cluster, "forecast", None)
+        self._surv_sample: Dict[float, Tuple[np.ndarray, np.ndarray]] = {}
         # Wave-level caches, scoped to ONE snapshot (planning is pure:
         # cluster state cannot change under us, so cached vectors stay valid
         # for the whole wave; `_topo_version` makes any violation loud).
@@ -288,13 +293,26 @@ class _WaveContextBuilder:
             self._transfer[key] = v
         return v
 
+    def surv_leaves(self, t: float) -> Tuple[np.ndarray, np.ndarray]:
+        """The snapshot's (surv_grid, survival) forecast leaves at ``t``,
+        cached per planning instant (waves share a handful of times)."""
+        cached = self._surv_sample.get(t)
+        if cached is None:
+            if self.forecast is None:
+                cached = (np.zeros(1), np.ones((self.n_dev, 1)))
+            else:
+                cached = (self.forecast.grid(), self.forecast.sample(t))
+            self._surv_sample[t] = cached
+        return cached
+
     def fleet(self, t: float) -> FleetSnapshot:
         """Struct-of-arrays snapshot of the fleet at time ``t`` (delegates
         to the one construction site, reusing the wave's cached arrays)."""
         bkt = self.cluster.bucket(t)
+        surv_grid, survival = self.surv_leaves(t)
         return self.cluster.snapshot(
             t, counts=self.counts_at_bucket(bkt), join_times=self.join,
-            alive=self.alive,
+            alive=self.alive, surv_grid=surv_grid, survival=survival,
         )
 
     def feasible_row(self, spec) -> np.ndarray:
@@ -425,6 +443,18 @@ class _WaveContextBuilder:
         window = (t_pool[:, None] - self.join[None, :]) + total_pool
         pf_pool = 1.0 - np.exp(-self.lams[None, :] * window)
 
+        # Forecast survival over each candidate's estimated execution span,
+        # evaluated exactly (scripted windows are step functions — sampling
+        # a grid would smear the cliff the churn_aware guard relies on).
+        if self.forecast is None:
+            survival_pool = np.ones_like(total_pool)
+        else:
+            survival_pool = np.empty_like(total_pool)
+            for g in range(G):
+                survival_pool[g] = self.forecast.survival(
+                    float(t_pool[g]), total_pool[g]
+                )
+
         # Per-row Task_info snapshots: rows sharing a T_alloc bucket share
         # one pool entry; (B, D, N) views materialise lazily on access.
         uniq, inv = np.unique(buckets, return_inverse=True)
@@ -444,6 +474,7 @@ class _WaveContextBuilder:
             total_pool=total_pool,
             feasible_pool=feasible_pool,
             pf_pool=pf_pool,
+            survival_pool=survival_pool,
             counts_pool=counts_pool,
             queue_pool=queue_pool,
             bucket_inv=inv,

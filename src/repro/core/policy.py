@@ -67,6 +67,7 @@ __all__ = [
     "LaTSModel",
     "LaTSPolicy",
     "TierEscalationPolicy",
+    "ChurnAwarePolicy",
 ]
 
 
@@ -103,6 +104,12 @@ class PolicyContext:
     # (D,) bool churn mask: devices not yet departed when the plan was made.
     # Already ANDed into ``feasible``; None on hand-built contexts == all up.
     alive: Optional[np.ndarray] = None
+    # (D,) forecast survival over THIS task's estimated execution span:
+    # S_d(t_start, t_start + total[d]).  All-ones when no availability
+    # forecast is installed; None on hand-built contexts == no forecast.
+    # Only forecast-aware policies (churn_aware) read it — the paper's six
+    # keep pricing failures through the memoryless ``pf``.
+    survival: Optional[np.ndarray] = None
 
     @property
     def n_devices(self) -> int:
@@ -229,13 +236,36 @@ class IBDASHPolicy(Policy):
         ).items() if v is not None}
         self.cfg = replace(cfg, **over) if over else cfg
 
-    def decide(self, ctx: PolicyContext) -> TaskDecision:
+    def _columns(
+        self, ctx: PolicyContext
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """The (pf, feasible) columns the scoring rule runs over — the
+        override hook for forecast-aware variants (ChurnAwarePolicy)."""
         cfg = self.cfg
         feasible = ctx.feasible
         if cfg.avail_floor > 0.0:
             avail = np.exp(-ctx.lams * (ctx.t_start - ctx.join_times))
             feasible = feasible & (avail >= cfg.avail_floor)
-        return TaskDecision(devices=self._score(ctx.total, ctx.pf, feasible))
+        return ctx.pf, feasible
+
+    def _batch_columns(
+        self, batch: BatchedPolicyContext
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(G, D) twin of :meth:`_columns` for the pooled batch tensors."""
+        cfg = self.cfg
+        feasible = batch.feasible_pool
+        if cfg.avail_floor > 0.0:
+            t_pool = batch.t_start[batch.pool_first]
+            avail = np.exp(
+                -batch.lams[None, :]
+                * (t_pool[:, None] - batch.join_times[None, :])
+            )
+            feasible = feasible & (avail >= cfg.avail_floor)
+        return batch.pf_pool, feasible
+
+    def decide(self, ctx: PolicyContext) -> TaskDecision:
+        pf, feasible = self._columns(ctx)
+        return TaskDecision(devices=self._score(ctx.total, pf, feasible))
 
     def decide_batch(self, batch: BatchedPolicyContext) -> BatchedDecision:
         """All B rows in one fused call: the scoring + replication loop as a
@@ -249,22 +279,15 @@ class IBDASHPolicy(Policy):
         Small pools take the scalar loop directly (jit dispatch would
         dominate)."""
         cfg = self.cfg
-        feasible = batch.feasible_pool
-        if cfg.avail_floor > 0.0:
-            t_pool = batch.t_start[batch.pool_first]
-            avail = np.exp(
-                -batch.lams[None, :]
-                * (t_pool[:, None] - batch.join_times[None, :])
-            )
-            feasible = feasible & (avail >= cfg.avail_floor)
+        pf, feasible = self._batch_columns(batch)
         if batch.n_distinct < BATCH_KERNEL_MIN_ROWS:
             pool_dec = [
-                self._score(batch.total_pool[g], batch.pf_pool[g], feasible[g])
+                self._score(batch.total_pool[g], pf[g], feasible[g])
                 for g in range(batch.n_distinct)
             ]
         else:
             pool_dec = ibdash_decide_batch(
-                batch.total_pool, batch.pf_pool, feasible,
+                batch.total_pool, pf, feasible,
                 cfg.alpha, cfg.beta, cfg.gamma,
             )
         return BatchedDecision(devices=tuple(
@@ -564,3 +587,67 @@ class TierEscalationPolicy(Policy):
             if np.isfinite(masked[best]) and masked[best] <= budget:
                 return (best,)
         return (int(np.argmin(np.where(feasible, total, np.inf))),)
+
+
+# -- churn-aware planning (the availability forecast as a policy input) --------
+@register_policy("churn_aware")
+class ChurnAwarePolicy(IBDASHPolicy):
+    """IBDASH scoring over forecast-adjusted failure probabilities.
+
+    The paper prices future departures only through the memoryless
+    ``F(T_i)`` (Eq. 3), but scripted maintenance windows and predicted
+    departures are *knowable in advance* (the mobility-aware orchestration
+    premise of arXiv:2110.07808).  When an availability forecast is
+    installed (``ChurnSchedule.install`` / ``ClusterState.install_forecast``)
+    the contexts carry each candidate's survival over the task's estimated
+    execution span, and this policy:
+
+      * drops candidates whose survival is at or below ``surv_floor``
+        (default 0.0 — i.e. candidates the forecast says WILL depart before
+        the task completes) whenever at least one feasible survivor exists,
+        so a task is never knowingly placed across a maintenance window;
+      * replaces the memoryless ``pf`` with the compound hazard
+        ``1 - S_d * (1 - pf_d)`` — the device must dodge both the forecast
+        hazard and the residual memoryless one — and runs Algorithm 1's
+        score-and-replicate rule unchanged over it.
+
+    With no forecast installed (or the uniform all-ones forecast) both
+    adjustments are exact no-ops — ``np.where(S >= 1, pf, ...)`` keeps the
+    pf column bit-identical — so placements equal registry ``ibdash``
+    bit-for-bit (pinned by the parity suite).  Stateless; the batched path
+    reuses the jitted IBDASH scan kernel over the adjusted columns and is
+    bit-identical to the scalar twin.
+    """
+
+    def __init__(self, *, surv_floor: float = 0.0, **kwargs):
+        super().__init__(**kwargs)
+        self.surv_floor = float(surv_floor)
+
+    def _adjust(
+        self, pf: np.ndarray, feasible: np.ndarray, surv: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(pf_eff, feasible_eff) for one row or a whole (G, D) pool."""
+        # exact no-op where the forecast is uniform: 1 - 1*(1 - pf) is NOT
+        # bit-identical to pf in IEEE arithmetic, so branch on S >= 1
+        pf_eff = np.where(surv >= 1.0, pf, 1.0 - surv * (1.0 - pf))
+        ok = feasible & (surv > self.surv_floor)
+        if ok.ndim == 1:
+            feas_eff = ok if ok.any() else feasible
+        else:
+            has = ok.any(axis=1)
+            feas_eff = np.where(has[:, None], ok, feasible)
+        return pf_eff, feas_eff
+
+    def _columns(
+        self, ctx: PolicyContext
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        pf, feasible = super()._columns(ctx)
+        if ctx.survival is None:        # hand-built context: no forecast
+            return pf, feasible
+        return self._adjust(pf, feasible, ctx.survival)
+
+    def _batch_columns(
+        self, batch: BatchedPolicyContext
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        pf, feasible = super()._batch_columns(batch)
+        return self._adjust(pf, feasible, batch.survival_pool)

@@ -25,6 +25,15 @@ pluggable recovery layer behind the simulator's churn runtime:
     and in-flight tasks keep their placements (and keep pricing downstream
     transfers), the doomed remainder is re-planned from scratch.
 
+Recovery composes with the engine's partial-result salvage layer: every
+``engine._finish_app(run, failed=True)`` verdict a strategy hands down —
+``fail_fast``'s immediate one, or a ``failover``/``replan`` giving up after
+``max_retries`` — is intercepted when ``Engine(salvage=...)`` is enabled
+and the instance has completed stages: those stages' placements are pinned
+through the same ``orchestrate(pinned=...)`` substrate ``replan`` uses and
+only the unfinished remainder is re-planned, so giving up on a *task* no
+longer always means discarding the whole instance's work.
+
 Strategies are engine-agnostic: they react to ``on_task_dead`` callbacks
 from :class:`repro.sim.engine.Engine` (fired both by the churn runtime's
 DEVICE_DOWN kills and by the passive lands-on-a-dead-device failure path)

@@ -25,7 +25,11 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.availability import fit_failure_rate, prob_fail_during
+from ..core.availability import (
+    SurvivalForecast,
+    fit_failure_rate,
+    prob_fail_during,
+)
 
 __all__ = ["PodState", "FleetMonitor", "ElasticPlan", "plan_remesh"]
 
@@ -99,6 +103,35 @@ class FleetMonitor:
 
     def fleet_lams(self) -> List[float]:
         return [self.lam(p.cls) for p in self.pods.values() if p.alive]
+
+    def forecast(
+        self,
+        classes: Sequence[str],
+        horizon: float = 30.0,
+        n_points: int = 16,
+    ) -> np.ndarray:
+        """(D, K) survival-probability tensor extrapolated from the online
+        lambda MLE: entry ``[d, k]`` is P(a class-``classes[d]`` pod stays
+        up through the next ``k/(K-1) * horizon`` seconds).  The same shape
+        :class:`~repro.sim.churn.ChurnSchedule.forecast` exports, so the
+        monitor can stand in as the availability forecast for live fleets."""
+        return self.forecaster(classes, horizon=horizon,
+                               n_points=n_points).sample(0.0)
+
+    def forecaster(
+        self,
+        classes: Sequence[str],
+        *,
+        horizon: float = 30.0,
+        n_points: int = 16,
+    ) -> SurvivalForecast:
+        """A :class:`SurvivalForecast` over the MLE rates of ``classes``
+        (one entry per device), installable on a ``ClusterState`` so the
+        ``churn_aware`` policy plans against the monitor's live estimates."""
+        return SurvivalForecast.from_rates(
+            [self.lam(c) for c in classes],
+            horizon=horizon, n_points=n_points,
+        )
 
     def prob_job_interrupted(self, horizon: float) -> float:
         """P(any member pod dies within ``horizon`` s) under independence."""

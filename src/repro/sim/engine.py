@@ -33,11 +33,20 @@ in-flight replicas on the spot (their remaining T_alloc occupancy is
 returned) and is masked out of every later placement's feasibility; a
 rejoining device comes back empty (fresh join time, cold model cache) and
 is re-admitted as placement capacity.
+
+Partial-result salvage: with ``salvage > 0``, an instance about to be
+declared lost (its recovery strategy gave up, or ``fail_fast`` fired) is
+re-submitted instead of discarded when it has completed stages to show for
+itself: the completed tasks' placements are pinned through the pure
+``orchestrate(pinned=...)`` substrate — so their outputs' transfer costs
+keep being priced from the devices that hold them — and only the unfinished
+remainder is re-planned and restarted.  Completed stages are NEVER re-run.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -130,6 +139,12 @@ class _AppRun:
     retries: Dict[str, int] = field(default_factory=dict)
     # a replica of this instance died at some point (recovered-vs-lost stats)
     touched: bool = False
+    # -- partial-result salvage -------------------------------------------------
+    # salvage resubmissions consumed (bounded by Engine.salvage)
+    salvages: int = 0
+    # bumped on every salvage so RECOVER events scheduled for the doomed
+    # pre-salvage placement are dropped instead of double-restarting tasks
+    epoch: int = 0
 
 
 class Engine:
@@ -149,6 +164,7 @@ class Engine:
         noise_sigma: float = 0.10,
         churn=None,
         recovery="fail_fast",
+        salvage: int = 0,
         track_intervals: bool = False,
     ):
         """``scheduler`` may be a pure :class:`~repro.core.policy.Policy`, a
@@ -161,7 +177,11 @@ class Engine:
         and rejoins).  ``recovery`` names a registered
         :class:`~repro.core.recovery.RecoveryStrategy` (or passes an
         instance); the default ``fail_fast`` is bit-identical to the
-        pre-churn engine.  ``track_intervals`` records every replica's
+        pre-churn engine.  ``salvage`` bounds per-instance partial-result
+        salvage resubmissions (0 = off, the bit-identical default): a lost
+        instance with completed stages is re-planned through
+        ``orchestrate(pinned=...)`` instead of discarded.
+        ``track_intervals`` records every replica's
         actual execution span in :attr:`executed` so tests can prove the
         occupancy bookkeeping nets to exactly the executed work."""
         self.cluster = cluster
@@ -190,9 +210,11 @@ class Engine:
         # marks a replica killed mid-flight (its tail occupancy returned)
         self.executed: List[Tuple[int, int, float, float, float]] = []
         self.replan_time = 0.0
+        self.salvage = int(salvage)
         self.stats: Dict[str, int] = {
             "device_down": 0, "device_up": 0, "replica_deaths": 0,
             "task_failovers": 0, "replans": 0, "recovered": 0, "lost": 0,
+            "salvages": 0, "salvaged": 0,
         }
         self.churn = churn or None      # False (churn forced off) == None
         if self.churn is not None:
@@ -224,7 +246,12 @@ class Engine:
         app, placement = run.app, run.placement
         while run.stage_idx < app.n_stages:
             stage = app.stages[run.stage_idx]
-            todo = [t for t in stage if t in placement.tasks]
+            # done tasks are skipped: after a salvage resubmission earlier
+            # stages are complete (pinned) and must never re-run
+            todo = [
+                t for t in stage
+                if t in placement.tasks and not run.done.get(t, False)
+            ]
             if todo:
                 run.stage_pending = len(todo)
                 for tname in todo:
@@ -315,16 +342,25 @@ class Engine:
         recovery strategy when it just lost its last replica."""
         self.stats["device_down"] += 1
         self.cluster.mark_down(did, self.now)
-        dead: List[Tuple[int, tuple]] = [
-            (rid, self._active.pop(rid)) for rid in sorted(self._dev_active[did])
+        # Each entry is stamped with its run's epoch AT THE POP: a salvage
+        # fired by an earlier entry's recovery re-plans the run (bumping the
+        # epoch) — the remaining pre-popped deaths then belong to a
+        # placement that no longer exists and must not touch the relaunched
+        # tasks' inflight counts (their occupancy is still returned below).
+        dead: List[Tuple[int, tuple, int]] = [
+            (rid, info, info[0].epoch)
+            for rid, info in (
+                (r, self._active.pop(r)) for r in sorted(self._dev_active[did])
+            )
         ]
-        for rid, info in dead:
+        for rid, info, epoch in dead:
             run, tname, _did, ttype, t0, t1 = info
             self._retire_replica(rid, info)
             self.cluster.cancel_from(did, ttype, t0, t1, self.now)
             if self.track_intervals:
                 self.executed.append((did, ttype, t0, t1, self.now))
-            if run.failed or run.done.get(tname, False):
+            if (run.failed or run.done.get(tname, False)
+                    or epoch != run.epoch):
                 continue
             run.touched = True
             self.stats["replica_deaths"] += 1
@@ -340,12 +376,17 @@ class Engine:
 
     def schedule_recovery(self, run: _AppRun, tname: str, t: float) -> None:
         """Recovery-strategy hook: fire ``recovery.recover(run, tname)`` at
-        absolute time ``t`` (death + detection delay)."""
-        self._push(t, self.RECOVER, (run, tname))
+        absolute time ``t`` (death + detection delay).  The event carries
+        the run's current epoch: a salvage resubmission in between
+        invalidates it (the doomed placement it targeted no longer exists)."""
+        self._push(t, self.RECOVER, (run, tname, run.epoch))
 
     def _finish_app(self, run: _AppRun, failed: bool) -> None:
         if not np.isnan(run.rec.finished):
             return
+        if failed and run.salvages < self.salvage and any(run.done.values()):
+            if self._salvage(run):
+                return                  # the instance lives on, re-planned
         if failed:
             self._cancel_running(run)
             self._cancel_provisional(run)
@@ -357,6 +398,48 @@ class Engine:
             self.stats["lost"] += 1
         elif run.touched:
             self.stats["recovered"] += 1
+            if run.salvages:
+                self.stats["salvaged"] += 1
+
+    def _salvage(self, run: _AppRun) -> bool:
+        """Partial-result salvage: instead of discarding a lost instance,
+        pin its COMPLETED tasks' placements (their outputs stay where they
+        were computed and keep pricing downstream transfers from those
+        devices) and re-plan + restart only the unfinished remainder via the
+        pure ``orchestrate(pinned=...)`` substrate.  Returns False when even
+        the live sub-fleet cannot host the remainder (the instance is then
+        truly lost)."""
+        cluster, t = self.cluster, self.now
+        run.salvages += 1
+        run.epoch += 1                  # invalidate pending RECOVER events
+        self.stats["salvages"] += 1
+        # kill still-running sibling replicas and return the unstarted
+        # remainder's provisional occupancy before re-planning, so the
+        # salvage plan prices the fleet as it will actually be
+        self._cancel_running(run)
+        self._cancel_provisional(run)
+        done = {k for k, v in run.done.items() if v}
+        pinned = {
+            k: tp for k, tp in run.placement.tasks.items() if k in done
+        }
+        for k in list(run.placement.tasks):
+            if k not in pinned:
+                del run.placement.tasks[k]
+        t0 = time.perf_counter()
+        plan = orchestrate(run.app, cluster, t, self.policy, pinned=pinned)
+        self.replan_time += time.perf_counter() - t0
+        if not plan.feasible:
+            return False
+        cluster.apply(plan)
+        for k, tp in plan.placement.tasks.items():
+            run.placement.tasks[k] = tp
+            run.origins[k] = plan.now
+        run.started = set(done)
+        run.inflight = {}
+        run.touched = True
+        run.stage_idx = 0               # _start_stage skips completed stages
+        self._start_stage(run)
+        return True
 
     def _cancel_running(self, run: _AppRun) -> None:
         """A failed app's still-executing sibling replicas (other in-flight
@@ -431,8 +514,11 @@ class Engine:
             elif kind == self.DEVICE_UP:
                 self._device_up(payload[0], payload[1])
             else:                                   # RECOVER
-                run, tname = payload
-                if not run.failed and not run.done.get(tname, False):
+                run, tname, epoch = payload
+                # stale epoch: a salvage resubmission replaced the placement
+                # this recovery was scheduled against
+                if (epoch == run.epoch and not run.failed
+                        and not run.done.get(tname, False)):
                     self.recovery.recover(self, run, tname)
         self.now = until
 

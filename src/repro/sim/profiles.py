@@ -130,11 +130,17 @@ LAMBDA_CHURN = LAMBDA_PED * CHURN_LAMBDA_SCALE
 # "churn" pairs the scaled-PED fleet with the churn runtime: the runner
 # generates a leave/rejoin event stream over it (repro.sim.churn) and the
 # engine reacts through the configured recovery strategy.
+# "correlated_churn" keeps the plain PED background rates but drives the
+# fleet with the CORRELATED generator (repro.sim.churn.correlated_churn):
+# per-group Marshall-Olkin shared shocks plus rotating scripted maintenance
+# windows — the mass-departure regime where the forecast-aware planner
+# (make_policy("churn_aware")) earns its keep.
 SCENARIOS: Dict[str, np.ndarray] = {
     "mix": LAMBDA_MIX,
     "ced": LAMBDA_CED,
     "ped": LAMBDA_PED,
     "churn": LAMBDA_CHURN,
+    "correlated_churn": LAMBDA_PED,
 }
 
 

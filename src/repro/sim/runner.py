@@ -31,6 +31,7 @@ __all__ = [
     "SimConfig",
     "policy_for",
     "make_scheduler",
+    "make_churn",
     "run_one",
     "run_grid",
     "sweep_alpha",
@@ -41,8 +42,10 @@ __all__ = [
 
 SCHEME_NAMES = ("ibdash", "lats", "lavea", "petrel", "round_robin", "random")
 # The paper's six schemes plus the multi-tier escalation policy (which only
-# differs from greedy-min-latency on fleets that declare tiers).
-ALL_SCHEME_NAMES = SCHEME_NAMES + ("tier_escalation",)
+# differs from greedy-min-latency on fleets that declare tiers) and the
+# forecast-aware IBDASH variant (which only differs from ibdash on clusters
+# with an installed availability forecast).
+ALL_SCHEME_NAMES = SCHEME_NAMES + ("tier_escalation", "churn_aware")
 
 
 @dataclass
@@ -68,17 +71,29 @@ class SimConfig:
     # Recovery strategy when a task loses its last replica: "fail_fast"
     # (Eq. 4, bit-identical to the seed engine), "failover", or "replan".
     recovery: str = "fail_fast"
-    # None = churn auto-enables for scenario "churn" only; True/False forces.
+    # None = churn auto-enables for the churn scenarios only; True/False forces.
     churn: Optional[bool] = None
     churn_seed: Optional[int] = None    # None = seed + 101
     rejoin: bool = True                 # departed devices rejoin after downtime
     mean_downtime: float = 20.0         # Exp() mean seconds away per departure
     detection_delay: float = 0.25       # missed-heartbeat detection lag
     max_retries: int = 2                # failover/replan attempts per task
+    # Partial-result salvage attempts per instance (0 = off): a lost
+    # instance with completed stages is re-planned via orchestrate(pinned=)
+    # instead of discarded.
+    salvage: int = 0
+    # -- correlated churn (scenario "correlated_churn") ------------------------
+    churn_groups: int = 8               # shared-shock groups (did % groups)
+    shock_rate: float = 0.005           # per-group mass-departure rate (1/s)
+    maintenance_period: float = 7.5     # one scripted drain per period...
+    maintenance_duration: float = 5.0   # ...taking a group down this long
+    maintenance_phase: float = 1.0      # first window start offset
 
     @property
     def churn_enabled(self) -> bool:
-        return self.churn if self.churn is not None else self.scenario == "churn"
+        if self.churn is not None:
+            return self.churn
+        return self.scenario in ("churn", "correlated_churn")
 
     @property
     def horizon(self) -> float:
@@ -124,6 +139,44 @@ def _make_workload(cfg: SimConfig) -> Tuple[List[AppDAG], List[float]]:
     return apps, times
 
 
+def make_churn(cfg: SimConfig, cluster) -> Optional["ChurnSchedule"]:
+    """Build the scenario's churn schedule over an already-built cluster
+    (shared by run_one, the churn benchmark and the demo): exponential
+    leave/rejoin cycles by default, the correlated generator — per-group
+    shared shocks plus rotating scripted maintenance windows — for
+    scenario "correlated_churn".  Returns None when churn is disabled."""
+    if not cfg.churn_enabled:
+        return None
+    # lazy: keeps the import graph flat
+    from .churn import (
+        correlated_churn,
+        device_groups,
+        exponential_churn,
+        periodic_windows,
+    )
+
+    seed = cfg.seed + 101 if cfg.churn_seed is None else cfg.churn_seed
+    horizon = cfg.horizon + 25.0
+    if cfg.scenario == "correlated_churn":
+        groups = device_groups(cluster.n_devices, cfg.churn_groups)
+        windows = periodic_windows(
+            groups,
+            period=cfg.maintenance_period,
+            duration=cfg.maintenance_duration,
+            horizon=horizon,
+            phase=cfg.maintenance_phase,
+        )
+        return correlated_churn(
+            cluster, horizon=horizon, seed=seed, groups=groups,
+            shock_rate=cfg.shock_rate, rejoin=cfg.rejoin,
+            mean_downtime=cfg.mean_downtime, windows=windows,
+        )
+    return exponential_churn(
+        cluster, horizon=horizon, seed=seed, rejoin=cfg.rejoin,
+        mean_downtime=cfg.mean_downtime,
+    )
+
+
 def run_one(
     scheme: str,
     cfg: SimConfig,
@@ -136,21 +189,11 @@ def run_one(
         profile, scenario=cfg.scenario, n_devices=cfg.n_devices, seed=cfg.seed,
         horizon=cfg.horizon + 30.0,
     )
-    churn = None
-    if cfg.churn_enabled:
-        from .churn import exponential_churn  # lazy: keeps import graph flat
-
-        churn = exponential_churn(
-            cluster,
-            horizon=cfg.horizon + 25.0,
-            seed=cfg.seed + 101 if cfg.churn_seed is None else cfg.churn_seed,
-            rejoin=cfg.rejoin,
-            mean_downtime=cfg.mean_downtime,
-        )
+    churn = make_churn(cfg, cluster)
     orch = Orchestrator(
         cluster, policy_for(scheme, profile, cfg),
         seed=cfg.seed, noise_sigma=cfg.noise_sigma,
-        churn=churn, recovery=cfg.recovery,
+        churn=churn, recovery=cfg.recovery, salvage=cfg.salvage,
         detection_delay=cfg.detection_delay, max_retries=cfg.max_retries,
     )
     apps, times = _make_workload(cfg)

@@ -101,7 +101,10 @@ def same_placement(a, b):
             assert ra.pred_fail == rb.pred_fail
 
 
-ALL_SCHEMES = SCHEME_NAMES
+# the paper's six plus the forecast-aware IBDASH variant: with no forecast
+# installed (every fixture here) churn_aware must ride every parity rail
+# bit-identically, and its batched/scalar twins must agree like the rest
+ALL_SCHEMES = SCHEME_NAMES + ("churn_aware",)
 
 
 # ---------------------------------------------------------- fleet snapshot --
@@ -125,10 +128,14 @@ def test_fleet_snapshot_is_a_pytree():
     _jax()  # registers the pytree nodes
     snap = small_cluster(n=3).snapshot(0.0)
     leaves, treedef = jax.tree_util.tree_flatten(snap)
-    assert len(leaves) == 13                 # + tiers, link_bw (PR 3), alive (PR 4)
+    # + tiers, link_bw (PR 3), alive (PR 4), surv_grid + survival (PR 5)
+    assert len(leaves) == 15
     again = jax.tree_util.tree_unflatten(treedef, leaves)
     assert isinstance(again, FleetSnapshot)
     assert np.array_equal(again.lams, snap.lams)
+    # with no forecast installed the survival leaves are the uniform tensor
+    assert snap.surv_grid.shape == (1,)
+    assert snap.survival.shape == (3, 1) and (snap.survival == 1.0).all()
 
 
 # ------------------------------------------------- decide_batch == decide --
@@ -205,6 +212,35 @@ def test_wave_equals_looped_orchestrate_for_stateless(scheme, profile):
                for app, t in zip(apps, times)]
     for a, b in zip(plans_b, plans_l):
         same_placement(a.placement, b.placement)
+
+
+@pytest.mark.parametrize("uniform_forecast", (False, True))
+def test_churn_aware_seed_parity_with_ibdash(profile, uniform_forecast):
+    """Satellite-1 seed parity: with no forecast installed — or the uniform
+    all-ones forecast — churn_aware's placements equal registry ibdash
+    BIT-identically on the seeded Fig. 8/9 grid (the PR-4 placements), with
+    applies in between so the T_alloc evolution is pinned too."""
+    from repro.core.availability import SurvivalForecast
+
+    cfg = SimConfig(n_cycles=1, instances_per_cycle=50, scenario="mix",
+                    seed=0, n_devices=24)
+    apps, times = _make_workload(cfg)
+    mk = lambda: make_cluster(profile, scenario=cfg.scenario,
+                              n_devices=cfg.n_devices, seed=cfg.seed,
+                              horizon=cfg.horizon + 30.0)
+    c_ib, c_ca = mk(), mk()
+    if uniform_forecast:
+        # all-ones survival: zero stochastic hazard, nothing scripted
+        c_ca.install_forecast(SurvivalForecast.from_rates([0.0] * 24))
+    pol_ib = policy_for("ibdash", profile, cfg)
+    pol_ca = policy_for("churn_aware", profile, cfg)
+    for app, t in zip(apps, times):
+        p_ib = orchestrate(app, c_ib, t, pol_ib)
+        p_ca = orchestrate(app, c_ca, t, pol_ca)
+        same_placement(p_ib.placement, p_ca.placement)
+        c_ib.apply(p_ib)
+        c_ca.apply(p_ca)
+    assert np.array_equal(c_ib.alloc, c_ca.alloc)
 
 
 def test_round_robin_batch_continues_cursor():
