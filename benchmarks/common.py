@@ -1,7 +1,15 @@
 """Shared benchmark context: one simulation grid reused by the Fig.8/9
-benches, CSV row helpers, and the --full switch (paper-scale protocol)."""
+benches, CSV row helpers, the --full switch (paper-scale protocol), and the
+baseline-regeneration CLI:
+
+    PYTHONPATH=src python -m benchmarks.common --update-baseline place churn stream
+
+re-runs each named gated bench's ``full_report()`` and overwrites its
+committed ``benchmarks/BENCH_<name>.baseline.json``.
+"""
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -70,3 +78,49 @@ class Ctx:
     def emit(self, name: str, value: float, derived: str = "") -> None:
         self.rows.append((name, value, derived))
         print(f"{name},{value:.6g},{derived}")
+
+
+# Benches whose full_report() is gated in CI against a committed baseline.
+GATED_BENCHES = ("place", "churn", "stream")
+
+
+def update_baselines(names: List[str]) -> None:
+    """Regenerate ``benchmarks/BENCH_<name>.baseline.json`` for each gated
+    bench by re-running its ``full_report()`` (the authoritative shape the
+    bench's ``check()`` consumes)."""
+    import importlib
+
+    here = os.path.dirname(__file__)
+    for name in names:
+        if name not in GATED_BENCHES:
+            raise SystemExit(
+                f"unknown gated bench {name!r} (choose from {GATED_BENCHES})"
+            )
+        mod = importlib.import_module(f"benchmarks.bench_{name}")
+        print(f"# regenerating {name} baseline ...", file=sys.stderr)
+        t0 = time.time()
+        report = mod.full_report()
+        path = os.path.join(here, f"BENCH_{name}.baseline.json")
+        with open(path, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {path} in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--update-baseline", nargs="*", metavar="BENCH", default=None,
+        help="regenerate the committed baseline json for these gated "
+             "benches (no names = all of them)",
+    )
+    args = ap.parse_args()
+    if args.update_baseline is None:
+        ap.error("nothing to do (pass --update-baseline [BENCH ...])")
+    update_baselines(args.update_baseline or list(GATED_BENCHES))
+
+
+if __name__ == "__main__":
+    main()

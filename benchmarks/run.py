@@ -27,6 +27,7 @@ from . import (
     bench_service_time,
     bench_serving,
     bench_serving_shard,
+    bench_stream,
 )
 from .common import Ctx
 
@@ -44,6 +45,7 @@ BENCHES = {
     "serving": bench_serving,             # beyond-paper fleet policies
     "roofline": bench_roofline,           # §Roofline (dry-run grid)
     "serving_shard": bench_serving_shard, # beyond-paper TP serving sharding
+    "stream": bench_stream,               # beyond-paper always-on service
 }
 
 

@@ -259,11 +259,14 @@ class Orchestrator:
 
     @property
     def stats(self) -> dict:
-        """Churn-runtime counters: device_down/device_up, replica_deaths,
+        """Engine counters.  Instance ledger — ``admitted`` (instances whose
+        ARRIVAL fired, plus stream-layer sheds), ``completed``, ``lost``
+        (failed) and ``shed`` (dropped by admission control) satisfy
+        ``admitted == completed + lost + shed``, asserted by :meth:`drain`.
+        Churn-runtime counters: device_down/device_up, replica_deaths,
         task_failovers, replans, recovered (instances that survived a
-        replica death), lost (instances that failed), salvages
-        (partial-result resubmissions) and salvaged (instances that
-        completed after at least one salvage)."""
+        replica death), salvages (partial-result resubmissions) and
+        salvaged (instances that completed after at least one salvage)."""
         return self.engine.stats
 
 
@@ -289,6 +292,23 @@ _LAZY = {
     "periodic_windows": ("repro.sim.churn", "periodic_windows"),
     "device_groups": ("repro.sim.churn", "device_groups"),
     "SurvivalForecast": ("repro.core.availability", "SurvivalForecast"),
+    # always-on streaming service (repro.stream)
+    "StreamingOrchestrator": ("repro.stream", "StreamingOrchestrator"),
+    "StreamResult": ("repro.stream", "StreamResult"),
+    "AdmissionConfig": ("repro.stream", "AdmissionConfig"),
+    "AdmissionController": ("repro.stream", "AdmissionController"),
+    "PlacementLatencyEstimator": ("repro.stream", "PlacementLatencyEstimator"),
+    "ShedRecord": ("repro.stream", "ShedRecord"),
+    "SLOClass": ("repro.stream", "SLOClass"),
+    "LATENCY_CRITICAL": ("repro.stream", "LATENCY_CRITICAL"),
+    "BEST_EFFORT": ("repro.stream", "BEST_EFFORT"),
+    "AppStream": ("repro.stream", "AppStream"),
+    "Arrival": ("repro.stream", "Arrival"),
+    "default_streams": ("repro.stream", "default_streams"),
+    "poisson_arrivals": ("repro.stream", "poisson_arrivals"),
+    "diurnal_arrivals": ("repro.stream", "diurnal_arrivals"),
+    "trace_replay": ("repro.stream", "trace_replay"),
+    "MetricsRegistry": ("repro.stream", "MetricsRegistry"),
 }
 
 

@@ -20,7 +20,6 @@ from .availability import (
     sample_lifetime,
     young_daly_interval,
 )
-from .baselines import LAVEA, LaTS, LaTSModel, Petrel, RandomScheduler, RoundRobinScheduler
 from .cluster import (
     TIER_CLOUD,
     TIER_DEVICE,
@@ -33,14 +32,13 @@ from .cluster import (
 from .dag import AppDAG, TaskSpec, app_stage, topological_order, validate_dag
 from .interference import InterferenceModel, fit_linear_interference
 from .orchestrator import (
-    IBDASH,
     IBDASHConfig,
     Placement,
     Plan,
     Replica,
-    Scheduler,
     TaskPlacement,
     orchestrate,
+    orchestrate_batch,
 )
 from .recovery import (
     FailFastRecovery,
@@ -54,6 +52,7 @@ from .recovery import (
 from .policy import (
     IBDASHPolicy,
     LAVEAPolicy,
+    LaTSModel,
     LaTSPolicy,
     PetrelPolicy,
     Policy,
@@ -82,14 +81,13 @@ __all__ = [
     "TIER_EDGE_SERVER",
     "TIER_CLOUD",
     "TIER_NAMES",
-    "IBDASH",
     "IBDASHConfig",
     "Placement",
     "Plan",
     "Replica",
-    "Scheduler",
     "TaskPlacement",
     "orchestrate",
+    "orchestrate_batch",
     "Policy",
     "PolicyContext",
     "TaskDecision",
@@ -110,11 +108,6 @@ __all__ = [
     "PetrelPolicy",
     "LaTSPolicy",
     "TierEscalationPolicy",
-    "RandomScheduler",
-    "RoundRobinScheduler",
-    "LAVEA",
-    "Petrel",
-    "LaTS",
     "LaTSModel",
     "availability",
     "prob_fail_during",

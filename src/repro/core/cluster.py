@@ -474,7 +474,7 @@ class ClusterState:
         Records the provisional T_alloc occupancy interval of every replica
         and admits required model artifacts into the per-device LRU caches
         (Algorithm 1 lines 19-27) — exactly the bookkeeping the seed's
-        ``Scheduler.commit`` performed, but as an explicit, undoable step.
+        scheduler commit step performed, but as an explicit, undoable step.
 
         Returns an :class:`ApplyToken`; pass it to :meth:`undo` to roll the
         state back exactly (speculative planning, alpha/gamma what-if

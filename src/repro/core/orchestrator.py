@@ -34,8 +34,10 @@ API shape (the redesign)
   exactly the bookkeeping the paper's orchestrator performs — and returns
   an undo token so speculative planning and what-if sweeps can
   ``cluster.undo(token)`` without corrupting state.
-* The legacy ``Scheduler.place`` entry point survives as a deprecated,
-  now *pure* shim over ``orchestrate`` (it no longer mutates anything).
+* The seed's mutate-inside-``place()`` ``Scheduler`` classes are gone:
+  every scheme is a registry policy (``make_policy(name, ...)``) driven
+  through this pure two-phase protocol.  The verbatim seed implementations
+  survive only in ``tests/_legacy_reference.py`` for the parity tests.
 
 Notes on fidelity
 -----------------
@@ -63,7 +65,6 @@ from .cluster import ClusterState
 from .dag import AppDAG
 from .policy import (
     IBDASHConfig,
-    IBDASHPolicy,
     Policy,
     PolicyContext,
     TaskDecision,
@@ -77,8 +78,6 @@ __all__ = [
     "Plan",
     "orchestrate",
     "orchestrate_batch",
-    "Scheduler",
-    "IBDASH",
     "IBDASHConfig",
 ]
 
@@ -163,6 +162,10 @@ class Plan:
     @property
     def tasks(self) -> Dict[str, TaskPlacement]:
         return self.placement.tasks
+
+    @property
+    def infeasible_task(self) -> Optional[str]:
+        return self.placement.infeasible_task
 
 
 # A wave-stage row is the lightweight tuple (state, tname, t_start, bucket);
@@ -669,114 +672,3 @@ def orchestrate(
         pinned=[pinned] if pinned else None,
     )[0]
 
-
-# -- deprecated one-PR compatibility shims -------------------------------------
-class Scheduler:
-    """DEPRECATED shim over the pure policy API (kept for one PR).
-
-    ``place`` is now PURE: it plans via :func:`orchestrate` and returns the
-    Placement without touching cluster state.  Mutation happens only through
-    ``cluster.apply(plan)`` — use :class:`repro.api.Orchestrator` or the
-    two-phase protocol directly in new code.
-    """
-
-    def __init__(self, policy: Policy):
-        self.policy = policy
-
-    @property
-    def name(self) -> str:
-        return self.policy.name
-
-    def plan(self, app: AppDAG, cluster: ClusterState, now: float) -> Plan:
-        return orchestrate(app, cluster, now, self.policy)
-
-    def place(self, app: AppDAG, cluster: ClusterState, now: float) -> Placement:
-        return self.plan(app, cluster, now).placement
-
-    # -- legacy helpers (now routed through the link matrix) --------------------
-    @staticmethod
-    def transfer_latency(
-        app: AppDAG, task: str, did: int, chosen: Dict[str, TaskPlacement],
-        link,
-    ) -> float:
-        """L(T_i)_d: move each parent's output from its primary device.
-
-        Pass the :class:`ClusterState` as ``link`` to price each hop over
-        the tier-aware ``(D, D)`` matrix — bit-for-bit what the policy path
-        charges, asymmetric fleets included.  A scalar bandwidth is still
-        accepted for the pre-matrix receiver-only pricing (deprecated; it
-        ignores the sender's uplink)."""
-        if isinstance(link, ClusterState):
-            row_of = link.link_bw()
-            total = 0.0
-            for dep in app.tasks[task].deps:
-                parent = chosen.get(dep)
-                if parent is None:
-                    continue
-                if parent.replicas and parent.replicas[0].did != did:
-                    total += (
-                        app.tasks[dep].out_bytes
-                        / row_of[parent.replicas[0].did, did]
-                    )
-            return total
-        total = 0.0
-        for dep in app.tasks[task].deps:
-            parent = chosen.get(dep)
-            if parent is None:
-                continue
-            if parent.replicas and parent.replicas[0].did != did:
-                total += app.tasks[dep].out_bytes / link
-        return total
-
-    @staticmethod
-    def upload_latency(
-        app: AppDAG, task: str, device, link
-    ) -> float:
-        """L(M(T_i)): model upload when the artifact is not cached.
-
-        Pass the :class:`ClusterState` as ``link`` to charge the upload over
-        the device <-> artifact-server link (``ClusterState.upload_bw``),
-        matching the policy path exactly; a scalar bandwidth keeps the
-        deprecated behaviour."""
-        spec = app.tasks[task]
-        if spec.model_id is None or device.has_model(spec.model_id):
-            return 0.0
-        if isinstance(link, ClusterState):
-            return spec.model_bytes / link.upload_bw()[device.did]
-        return spec.model_bytes / link
-
-    @staticmethod
-    def commit(
-        app: AppDAG,
-        cluster: ClusterState,
-        now: float,
-        placements: Dict[str, TaskPlacement],
-    ) -> Placement:
-        """DEPRECATED: assemble a Placement and apply it via the one blessed
-        mutation path, ``cluster.apply(plan)``."""
-        est_latency = 0.0
-        for stage in app.stages:
-            stage_lat = 0.0
-            for tname in stage:
-                tp = placements.get(tname)
-                if tp is not None:
-                    stage_lat = max(stage_lat, tp.est_latency)
-            est_latency += stage_lat
-        placement = Placement(
-            app_name=app.name, tasks=placements, est_latency=est_latency
-        )
-        cluster.apply(Plan(app=app, now=now, placement=placement))
-        return placement
-
-
-class IBDASH(Scheduler):
-    """DEPRECATED shim: Algorithm 1 now lives in
-    :class:`repro.core.policy.IBDASHPolicy`; construct via
-    ``make_policy("ibdash", alpha=..., beta=..., gamma=...)``."""
-
-    def __init__(self, config: Optional[IBDASHConfig] = None):
-        super().__init__(IBDASHPolicy(config))
-
-    @property
-    def cfg(self) -> IBDASHConfig:
-        return self.policy.cfg

@@ -19,8 +19,8 @@ not be composed, batched, or replayed.  This module splits the two concerns:
     all five baselines are each ~10-30 lines.
 
 Policies are registered by name with :func:`register_policy` and built with
-:func:`make_policy`, replacing the if-chains that previously lived in
-``sim.runner.make_scheduler`` and ``serve.scheduler.ServingFleet``.  Every
+:func:`make_policy`, replacing the per-scheme if-chains that previously
+lived in ``sim.runner`` and ``serve.scheduler.ServingFleet``.  Every
 factory accepts the full keyword bundle (``alpha``, ``beta``, ``gamma``,
 ``seed``, ``lats_model``, ...) and picks out what it needs, so callers can
 construct any scheme uniformly.

@@ -173,11 +173,28 @@ class ServingFleet:
         arrival_window: float = 20.0,
         seed: int = 1,
         fused: bool = False,
+        admission: Optional["AdmissionConfig"] = None,
+        admission_slo: Tuple[float, float] = (2.0, 10.0),
+        tick: float = 0.1,
     ) -> SimResult:
         """Serve a request stream.  ``fused=True`` admission-plans the whole
         wave with one batched ``decide_batch`` call per stage (prefill wave,
-        then decode wave) — the bulk-admission mode for traffic spikes."""
+        then decode wave) — the bulk-admission mode for traffic spikes.
+
+        Passing ``admission`` (an :class:`repro.stream.AdmissionConfig`)
+        routes the request stream through the SAME bounded admission queue
+        the simulator's streaming service uses: short requests become the
+        ``latency_critical`` class, long requests ``best_effort``
+        (``admission_slo`` gives their E2E deadlines in seconds), overload
+        is deadline-shed/backpressured instead of queued forever, and the
+        returned result carries the service's
+        :class:`~repro.stream.StreamResult` as ``res.stream``."""
         rng = np.random.default_rng(seed)
+        if admission is not None:
+            return self._run_admitted(
+                n_requests, long_frac, arrival_window, rng, admission,
+                admission_slo, tick,
+            )
         apps, times = [], []
         for i in range(n_requests):
             rc = LONG if rng.random() < long_frac else SHORT
@@ -186,6 +203,56 @@ class ServingFleet:
         self.orchestrator.submit_batch(apps, sorted(times), fused=fused)
         self.orchestrator.step(until=self.horizon)
         return self.orchestrator.result(scenario="serving", horizon=self.horizon)
+
+    def _run_admitted(
+        self,
+        n_requests: int,
+        long_frac: float,
+        arrival_window: float,
+        rng: np.random.Generator,
+        admission: "AdmissionConfig",
+        admission_slo: Tuple[float, float],
+        tick: float,
+    ) -> SimResult:
+        from ..stream import (
+            Arrival,
+            AppStream,
+            SLOClass,
+            StreamingOrchestrator,
+        )
+
+        short_slo = SLOClass("latency_critical", admission_slo[0], True)
+        long_slo = SLOClass("best_effort", admission_slo[1], False)
+        streams = {
+            "short": AppStream(
+                "short", lambda: make_request_dag("", SHORT), slo=short_slo
+            ),
+            "long": AppStream(
+                "long", lambda: make_request_dag("", LONG), slo=long_slo
+            ),
+        }
+        rows = []
+        for _ in range(n_requests):
+            name = "long" if rng.random() < long_frac else "short"
+            rows.append((float(rng.uniform(0.0, arrival_window)), name))
+        rows.sort(key=lambda r: r[0])
+        arrivals = [
+            Arrival(
+                t=t, slo=streams[name].slo,
+                deadline=t + streams[name].slo.deadline,
+                stream=streams[name], uid=uid,
+            )
+            for uid, (t, name) in enumerate(rows)
+        ]
+        service = StreamingOrchestrator(
+            self.orchestrator, admission=admission, tick=tick,
+        )
+        stream_res = service.run(arrivals)
+        res = self.orchestrator.result(
+            scenario="serving", horizon=self.horizon
+        )
+        res.stream = stream_res
+        return res
 
 
 def serving_interference_model(

@@ -54,7 +54,7 @@ import numpy as np
 
 from ..core.cluster import ClusterState
 from ..core.dag import AppDAG
-from ..core.orchestrator import Placement, Replica, Scheduler, orchestrate
+from ..core.orchestrator import Placement, Replica, orchestrate
 from ..core.policy import Policy, make_policy
 from ..core.recovery import RecoveryStrategy, make_recovery
 
@@ -167,9 +167,9 @@ class Engine:
         salvage: int = 0,
         track_intervals: bool = False,
     ):
-        """``scheduler`` may be a pure :class:`~repro.core.policy.Policy`, a
-        registered policy name, or a legacy :class:`Scheduler` shim — every
-        placement is routed through ``orchestrate`` + ``cluster.apply``.
+        """``scheduler`` may be a pure :class:`~repro.core.policy.Policy` or
+        a registered policy name — every placement is routed through
+        ``orchestrate`` + ``cluster.apply``.
 
         ``churn`` is an optional :class:`repro.sim.churn.ChurnSchedule`;
         installing one makes the schedule the single source of truth for
@@ -187,10 +187,7 @@ class Engine:
         self.cluster = cluster
         if isinstance(scheduler, str):
             scheduler = make_policy(scheduler, seed=seed)
-        self.policy: Policy = (
-            scheduler.policy if isinstance(scheduler, Scheduler) else scheduler
-        )
-        self.scheduler = scheduler
+        self.policy: Policy = scheduler
         self.recovery: RecoveryStrategy = (
             make_recovery(recovery) if isinstance(recovery, str) else recovery
         )
@@ -211,7 +208,14 @@ class Engine:
         self.executed: List[Tuple[int, int, float, float, float]] = []
         self.replan_time = 0.0
         self.salvage = int(salvage)
+        # Conservation ledger: every instance the engine takes accounting
+        # responsibility for lands in exactly one terminal bucket —
+        #   admitted == completed + lost + shed
+        # ("shed" is charged by the stream admission layer, which counts a
+        # shed arrival as admitted-and-shed; pure engine runs keep it 0).
+        # ``drain`` asserts the identity.
         self.stats: Dict[str, int] = {
+            "admitted": 0, "completed": 0, "shed": 0,
             "device_down": 0, "device_up": 0, "replica_deaths": 0,
             "task_failovers": 0, "replans": 0, "recovered": 0, "lost": 0,
             "salvages": 0, "salvaged": 0,
@@ -396,10 +400,12 @@ class Engine:
         run.rec.service_time = self.now - run.rec.arrival
         if failed:
             self.stats["lost"] += 1
-        elif run.touched:
-            self.stats["recovered"] += 1
-            if run.salvages:
-                self.stats["salvaged"] += 1
+        else:
+            self.stats["completed"] += 1
+            if run.touched:
+                self.stats["recovered"] += 1
+                if run.salvages:
+                    self.stats["salvaged"] += 1
 
     def _salvage(self, run: _AppRun) -> bool:
         """Partial-result salvage: instead of discarding a lost instance,
@@ -498,10 +504,15 @@ class Engine:
                     pred_fail=placement.pred_app_fail,
                 )
                 self.records.append(rec)
+                self.stats["admitted"] += 1
                 if not placement.feasible:
+                    # an infeasible arrival is an instance the fleet turned
+                    # away: it is LOST the moment it arrives (previously it
+                    # only set rec.failed, silently drifting the counters)
                     rec.failed = True
                     rec.finished = t
                     rec.service_time = 0.0
+                    self.stats["lost"] += 1
                     continue
                 run = _AppRun(rec=rec, app=app, placement=placement,
                               plan_now=plan.now)
@@ -523,9 +534,31 @@ class Engine:
         self.now = until
 
     def drain(self) -> None:
-        """Process every remaining event (online mode: no fixed horizon)."""
+        """Process every remaining event (online mode: no fixed horizon),
+        then assert the conservation identity — a drained engine must have
+        resolved every admitted instance into exactly one terminal bucket,
+        and its in-flight replica registry must be empty (the occupancy
+        analogue: nothing still holds queue capacity)."""
         while self.events:
             self.run(until=self.events[0][0])
+        self.check_conservation()
+
+    def check_conservation(self) -> None:
+        """``admitted == completed + lost + shed`` and no replica in
+        flight.  Raises RuntimeError on drift — the regression guard for
+        the counter bookkeeping."""
+        s = self.stats
+        settled = s["completed"] + s["lost"] + s["shed"]
+        if s["admitted"] != settled:
+            raise RuntimeError(
+                f"instance-counter drift: admitted {s['admitted']} != "
+                f"completed {s['completed']} + lost {s['lost']} + shed "
+                f"{s['shed']}"
+            )
+        if self._active:
+            raise RuntimeError(
+                f"{len(self._active)} replicas still in flight after drain"
+            )
 
     def finalize(self, until: Optional[float] = None) -> None:
         """Permanently close the books: anything still unfinished counts as
@@ -538,6 +571,7 @@ class Engine:
                 rec.failed = True
                 rec.finished = until
                 rec.service_time = until - rec.arrival
+                self.stats["lost"] += 1
 
     def result(self, scenario: str, horizon: float) -> SimResult:
         """Snapshot the metrics.  In-flight instances are *reported* as

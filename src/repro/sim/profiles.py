@@ -25,7 +25,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.availability import LAMBDA_CED, LAMBDA_MIX, LAMBDA_PED, sample_lifetime
-from ..core.baselines import LaTSModel
+from ..core.policy import LaTSModel
 from ..core.cluster import (
     TIER_CLOUD,
     TIER_DEVICE,
@@ -141,6 +141,10 @@ SCENARIOS: Dict[str, np.ndarray] = {
     "ped": LAMBDA_PED,
     "churn": LAMBDA_CHURN,
     "correlated_churn": LAMBDA_PED,
+    # The always-on streaming service runs over the standard mixed fleet;
+    # what changes is the workload (open-loop arrivals through admission),
+    # handled in repro.sim.runner / repro.stream.
+    "stream": LAMBDA_MIX,
 }
 
 

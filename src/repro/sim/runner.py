@@ -30,7 +30,6 @@ from .profiles import EdgeProfile, make_cluster, make_profile
 __all__ = [
     "SimConfig",
     "policy_for",
-    "make_scheduler",
     "make_churn",
     "run_one",
     "run_grid",
@@ -88,6 +87,18 @@ class SimConfig:
     maintenance_period: float = 7.5     # one scripted drain per period...
     maintenance_duration: float = 5.0   # ...taking a group down this long
     maintenance_phase: float = 1.0      # first window start offset
+    # -- streaming service (scenario "stream"; repro.stream) -------------------
+    stream_rate: float = 120.0          # offered load, instances/sec
+    stream_process: str = "poisson"     # "poisson" | "diurnal"
+    stream_peak_rate: Optional[float] = None  # diurnal peak (None = 2x rate)
+    stream_period: float = 60.0         # diurnal period, seconds
+    stream_queue_cap: Optional[int] = 512
+    stream_admission: bool = True       # False = no-admission baseline
+    stream_tick: float = 0.25           # service-loop dispatch tick
+    stream_wave: Optional[int] = None   # max instances per dispatch wave
+    slo_critical: float = 6.0           # latency_critical E2E budget (s)
+    slo_best_effort: float = 30.0       # best_effort E2E budget (s)
+    stream_metrics_interval: float = 1.0
 
     @property
     def churn_enabled(self) -> bool:
@@ -111,14 +122,6 @@ def policy_for(name: str, profile: EdgeProfile, cfg: SimConfig) -> Policy:
         lats_model=profile.lats_model,
         latency_budget=cfg.latency_budget,
     )
-
-
-def make_scheduler(name: str, profile: EdgeProfile, cfg: SimConfig):
-    """DEPRECATED: returns the legacy pure-``place`` Scheduler shim wrapping
-    the registry policy; new code should use :func:`policy_for`."""
-    from ..core.orchestrator import Scheduler
-
-    return Scheduler(policy_for(name, profile, cfg))
 
 
 def _make_workload(cfg: SimConfig) -> Tuple[List[AppDAG], List[float]]:
@@ -177,6 +180,63 @@ def make_churn(cfg: SimConfig, cluster) -> Optional["ChurnSchedule"]:
     )
 
 
+def _run_stream(cfg: SimConfig, scheme: str, profile: EdgeProfile) -> SimResult:
+    """Scenario ``"stream"``: open-loop arrivals through the always-on
+    service (:mod:`repro.stream`) instead of the closed-loop cycle burst.
+    The returned :class:`SimResult` carries the full
+    :class:`~repro.stream.service.StreamResult` as ``res.stream``."""
+    from ..api import Orchestrator
+    from ..stream import (
+        AdmissionConfig,
+        StreamingOrchestrator,
+        default_streams,
+        diurnal_arrivals,
+        poisson_arrivals,
+    )
+
+    # Generous horizon: the no-admission baseline drains its backlog long
+    # after the last arrival.
+    cluster = make_cluster(
+        profile, scenario="stream", n_devices=cfg.n_devices, seed=cfg.seed,
+        horizon=cfg.horizon * 3.0 + 60.0,
+    )
+    churn = make_churn(cfg, cluster)
+    orch = Orchestrator(
+        cluster, policy_for(scheme, profile, cfg),
+        seed=cfg.seed, noise_sigma=cfg.noise_sigma,
+        churn=churn, recovery=cfg.recovery, salvage=cfg.salvage,
+        detection_delay=cfg.detection_delay, max_retries=cfg.max_retries,
+    )
+    streams = default_streams(
+        slo_critical=cfg.slo_critical, slo_best_effort=cfg.slo_best_effort
+    )
+    if cfg.stream_process == "diurnal":
+        peak = cfg.stream_peak_rate or 2.0 * cfg.stream_rate
+        arrivals = diurnal_arrivals(
+            streams, cfg.stream_rate, peak, cfg.horizon,
+            period=cfg.stream_period, seed=cfg.seed + 7,
+        )
+    elif cfg.stream_process == "poisson":
+        arrivals = poisson_arrivals(
+            streams, cfg.stream_rate, cfg.horizon, seed=cfg.seed + 7,
+        )
+    else:
+        raise ValueError(f"unknown stream_process {cfg.stream_process!r}")
+    admission = (
+        AdmissionConfig(queue_cap=cfg.stream_queue_cap)
+        if cfg.stream_admission else None
+    )
+    service = StreamingOrchestrator(
+        orch, admission=admission, tick=cfg.stream_tick,
+        wave_cap=cfg.stream_wave,
+        metrics_interval=cfg.stream_metrics_interval,
+    )
+    stream_res = service.run(arrivals)
+    res = stream_res.result
+    res.stream = stream_res            # SimResult is a plain dataclass
+    return res
+
+
 def run_one(
     scheme: str,
     cfg: SimConfig,
@@ -185,6 +245,8 @@ def run_one(
     from ..api import Orchestrator  # lazy: api sits above sim in the layering
 
     profile = profile or make_profile(seed=cfg.seed)
+    if cfg.scenario == "stream":
+        return _run_stream(cfg, scheme, profile)
     cluster = make_cluster(
         profile, scenario=cfg.scenario, n_devices=cfg.n_devices, seed=cfg.seed,
         horizon=cfg.horizon + 30.0,

@@ -1,7 +1,7 @@
 """Tier-aware link matrices (PR 3): the bottleneck rule, sender-aware
-transfer pricing, multi-tier fleets, the tier_escalation policy, the legacy
-shim routing, snapshot-scoped builder caches, and the fused-burst
-provisional-interval alignment."""
+transfer pricing, multi-tier fleets, the tier_escalation policy,
+snapshot-scoped builder caches, and the fused-burst provisional-interval
+alignment."""
 import numpy as np
 import pytest
 
@@ -17,7 +17,6 @@ from repro.api import (
 from repro.core.cluster import ClusterState, Device
 from repro.core.dag import AppDAG, TaskSpec
 from repro.core.interference import InterferenceModel
-from repro.core.orchestrator import Scheduler
 from repro.sim import SimConfig, make_multi_tier_cluster, make_profile, run_one
 from repro.sim.engine import Engine
 from repro.sim.runner import ALL_SCHEME_NAMES, _make_workload, policy_for
@@ -166,31 +165,29 @@ def test_upload_charged_over_model_source_link():
     assert rep.est_upload == pytest.approx(80 * MB / up[rep.did])
 
 
-# ------------------------------------------------ legacy scheduler shims --
-def test_legacy_shims_route_through_link_matrix():
+# ------------------------------------------ plan costs vs link matrices --
+def test_plan_costs_priced_over_link_matrix():
+    """The replica cost breakdown in the Plan is exactly the link-matrix
+    price: out_bytes / bw_eff[parent, child] for transfers, model_bytes /
+    upload_bw[d] for artifact uploads."""
     ups = (1 * MB, 100 * MB)
     c = tiered_cluster(ups, (100 * MB, 100 * MB), (0, 0), n_types=2,
                        base=np.array([[0.1, 0.5], [5.0, 0.2]]))
     app = chain_app(out_bytes=10 * MB, parent_ttype=0, child_ttype=1)
     plan = orchestrate(app, c, 0.0, make_policy("ibdash"))
-    chosen = plan.tasks
-    pdid = chosen["parent"].replicas[0].did
-    for did in range(2):
-        want = 0.0 if did == pdid else 10 * MB / c.link_bw()[pdid, did]
-        assert Scheduler.transfer_latency(
-            app, "child", did, chosen, c
-        ) == pytest.approx(want)
-    # scalar fallback keeps the deprecated receiver-only behaviour
-    assert Scheduler.transfer_latency(
-        app, "child", 1 - pdid, chosen, 50 * MB
-    ) == pytest.approx(10 * MB / (50 * MB))
+    pdid = plan.tasks["parent"].replicas[0].did
+    crep = plan.tasks["child"].replicas[0]
+    want = 0.0 if crep.did == pdid else 10 * MB / c.link_bw()[pdid, crep.did]
+    assert crep.est_transfer == pytest.approx(want)
 
     mapp = AppDAG.from_tasks("m", [TaskSpec(
         "t", ttype=0, model_id="w", model_bytes=40 * MB)])
-    for did in range(2):
-        assert Scheduler.upload_latency(
-            mapp, "t", c.devices[did], c
-        ) == pytest.approx(40 * MB / c.upload_bw()[did])
+    for name in ("ibdash", "round_robin"):
+        p = orchestrate(mapp, c, 0.0, make_policy(name))
+        rep = p.tasks["t"].replicas[0]
+        assert rep.est_upload == pytest.approx(
+            40 * MB / c.upload_bw()[rep.did]
+        )
 
 
 # --------------------------------------------- snapshot-scoped caches --

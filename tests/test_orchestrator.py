@@ -1,12 +1,12 @@
-"""IBDASH Algorithm 1 + baseline schedulers: placement semantics."""
+"""IBDASH Algorithm 1 + baseline policies: placement semantics."""
 import numpy as np
 import pytest
 
-from repro.core.baselines import LAVEA, LaTS, LaTSModel, Petrel, RandomScheduler, RoundRobinScheduler
 from repro.core.cluster import ClusterState, Device
 from repro.core.dag import AppDAG, TaskSpec
 from repro.core.interference import InterferenceModel
-from repro.core.orchestrator import IBDASH, IBDASHConfig
+from repro.core.orchestrator import IBDASHConfig, orchestrate
+from repro.core.policy import IBDASHPolicy, make_policy
 
 GB = 1e9
 
@@ -31,9 +31,14 @@ def single_task_app(mem=0.0, model_id=None, model_bytes=0.0):
     )])
 
 
+def place(policy, app, cluster, now=0.0):
+    """Plan through the pure policy API (no mutation)."""
+    return orchestrate(app, cluster, now, policy)
+
+
 def test_picks_min_latency_device():
     cluster = make_cluster()
-    p = IBDASH().place(single_task_app(), cluster, now=0.0)
+    p = place(IBDASHPolicy(), single_task_app(), cluster)
     assert p.feasible
     assert p.tasks["t0"].replicas[0].did == 0          # base 0.1 is fastest
 
@@ -42,14 +47,14 @@ def test_interference_steers_away_from_loaded_device():
     cluster = make_cluster()
     # pre-load device 0 with 10 concurrent tasks: 0.1 + 10*0.05 = 0.6 > 0.2
     cluster.add_interval(0, 0, 0.0, 50.0, w=10)
-    p = IBDASH().place(single_task_app(), cluster, now=0.0)
+    p = place(IBDASHPolicy(), single_task_app(), cluster)
     assert p.tasks["t0"].replicas[0].did == 1
 
 
 def test_memory_constraint_excludes_devices():
     cluster = make_cluster(mem=1 * GB)
     app = single_task_app(mem=2 * GB)
-    p = IBDASH().place(app, cluster, now=0.0)
+    p = place(IBDASHPolicy(), app, cluster)
     assert not p.feasible and p.infeasible_task == "t0"
 
 
@@ -58,7 +63,7 @@ def test_model_upload_latency_considered():
     # 100 MB model: 10 s upload everywhere; but cache it on slow device 3
     cluster.devices[3].admit_model("m", 100e6)
     app = single_task_app(model_id="m", model_bytes=100e6)
-    p = IBDASH().place(app, cluster, now=0.0)
+    p = place(IBDASHPolicy(), app, cluster)
     # 0.4s exec on dev3 beats 0.1s + 10s upload on dev0
     assert p.tasks["t0"].replicas[0].did == 3
     assert p.tasks["t0"].replicas[0].est_upload == 0.0
@@ -70,7 +75,7 @@ def test_transfer_latency_colocates_children():
         TaskSpec("parent", ttype=0, out_bytes=50e6),
         TaskSpec("child", ttype=0, deps=("parent",)),
     ])
-    p = IBDASH().place(app, cluster, now=0.0)
+    p = place(IBDASHPolicy(), app, cluster)
     assert p.tasks["child"].replicas[0].did == p.tasks["parent"].replicas[0].did
 
 
@@ -80,7 +85,7 @@ def test_replication_triggers_on_flaky_devices():
     # (a 2x-slower replica would be correctly rejected by line 34)
     cluster = make_cluster(lam=(5e-1,) * 4, base=(0.1, 0.101, 0.102, 0.103))
     cfg = IBDASHConfig(alpha=0.2, beta=0.01, gamma=3)
-    p = IBDASH(cfg).place(single_task_app(), cluster, now=0.0)
+    p = place(IBDASHPolicy(cfg), single_task_app(), cluster)
     tp = p.tasks["t0"]
     assert len(tp.replicas) > 1
     assert tp.pred_fail < tp.replicas[0].pred_fail      # replication reduced F
@@ -91,23 +96,22 @@ def test_replication_triggers_on_flaky_devices():
 
 def test_no_replication_on_reliable_devices():
     cluster = make_cluster(lam=(1e-9,) * 4)
-    p = IBDASH(IBDASHConfig(beta=0.1, gamma=3)).place(single_task_app(), cluster, 0.0)
+    p = place(IBDASHPolicy(beta=0.1, gamma=3), single_task_app(), cluster)
     assert len(p.tasks["t0"].replicas) == 1
 
 
 def test_gamma_caps_replication():
     cluster = make_cluster(lam=(9e-2,) * 4)
     cfg = IBDASHConfig(alpha=0.0, beta=1e-9, gamma=2)   # always wants more
-    p = IBDASH(cfg).place(single_task_app(), cluster, 0.0)
+    p = place(IBDASHPolicy(cfg), single_task_app(), cluster)
     assert len(p.tasks["t0"].replicas) <= 1 + 2
 
 
 def test_place_is_pure_and_apply_commits_talloc():
-    from repro.core.orchestrator import orchestrate
-
     cluster = make_cluster()
     # planning alone must not touch T_alloc ...
-    plan = orchestrate(single_task_app(), cluster, now=0.0, policy=IBDASH().policy)
+    plan = orchestrate(single_task_app(), cluster, now=0.0,
+                       policy=IBDASHPolicy())
     assert cluster.counts_at(0.01)[0, 0] == 0
     assert (cluster.alloc == 0).all()
     # ... the explicit apply step records the interval
@@ -115,10 +119,12 @@ def test_place_is_pure_and_apply_commits_talloc():
     assert cluster.counts_at(0.01)[0, 0] >= 1           # interval recorded
 
 
-def test_legacy_place_shim_no_longer_mutates():
+def test_registry_policies_plan_without_mutating():
     cluster = make_cluster()
-    IBDASH().place(single_task_app(), cluster, now=0.0)
-    assert (cluster.alloc == 0).all()
+    for name in ("ibdash", "random", "round_robin", "lavea", "petrel"):
+        p = place(make_policy(name, seed=0), single_task_app(), cluster)
+        assert p.feasible
+        assert (cluster.alloc == 0).all()
 
 
 def test_eq3_stage_sum():
@@ -128,7 +134,7 @@ def test_eq3_stage_sum():
         TaskSpec("b", ttype=0, deps=("a",)),
         TaskSpec("c", ttype=0, deps=("b",)),
     ])
-    p = IBDASH().place(app, cluster, now=0.0)
+    p = place(IBDASHPolicy(), app, cluster)
     per_stage = [p.tasks[t].est_latency for t in ("a", "b", "c")]
     assert p.est_latency == pytest.approx(sum(per_stage), rel=1e-6)
 
@@ -139,29 +145,29 @@ def test_lavea_picks_shortest_queue():
     cluster.add_interval(1, 0, 0.0, 50.0, w=3)
     cluster.add_interval(2, 0, 0.0, 50.0, w=1)
     cluster.add_interval(3, 0, 0.0, 50.0, w=2)
-    p = LAVEA(seed=0).place(single_task_app(), cluster, now=0.0)
+    p = place(make_policy("lavea", seed=0), single_task_app(), cluster)
     assert p.tasks["t0"].replicas[0].did == 2
 
 
 def test_round_robin_cycles():
     cluster = make_cluster()
-    rr = RoundRobinScheduler()
-    dids = [rr.place(single_task_app(), cluster, 0.0).tasks["t0"].replicas[0].did
+    rr = make_policy("round_robin")
+    dids = [place(rr, single_task_app(), cluster).tasks["t0"].replicas[0].did
             for _ in range(4)]
     assert dids == [0, 1, 2, 3]
 
 
 def test_petrel_power_of_two():
     cluster = make_cluster()
-    # device 0 fastest: petrel must never pick a device slower than BOTH samples
-    p = Petrel(seed=1)
+    # device 0 fastest: petrel must never return an infeasible plan here
+    pol = make_policy("petrel", seed=1)
     for _ in range(10):
-        placement = p.place(single_task_app(), cluster, 0.0)
+        placement = place(pol, single_task_app(), cluster)
         assert placement.feasible
 
 
 def test_baselines_single_replica():
     cluster = make_cluster(lam=(5e-2,) * 4)
-    for sched in (RandomScheduler(0), RoundRobinScheduler(0), LAVEA(0), Petrel(0)):
-        p = sched.place(single_task_app(), cluster, 0.0)
+    for name in ("random", "round_robin", "lavea", "petrel"):
+        p = place(make_policy(name, seed=0), single_task_app(), cluster)
         assert len(p.tasks["t0"].replicas) == 1          # no replication in baselines

@@ -1,0 +1,426 @@
+"""The always-on streaming service (repro.stream): arrival processes,
+admission control + SLO classes, the service loop, the metrics surface,
+and the engine's instance-conservation ledger."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import ClusterState, Device
+from repro.core.dag import AppDAG, TaskSpec
+from repro.core.interference import InterferenceModel
+from repro.core.policy import IBDASHPolicy, make_policy
+from repro.sim.engine import Engine
+from repro.stream import (
+    AdmissionConfig,
+    AdmissionController,
+    AppStream,
+    Arrival,
+    MetricsRegistry,
+    PlacementLatencyEstimator,
+    SLOClass,
+    StreamingOrchestrator,
+    default_streams,
+    diurnal_arrivals,
+    poisson_arrivals,
+    trace_replay,
+)
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+GB = 1e9
+MB = 1e6
+
+CRIT = SLOClass("latency_critical", deadline=5.0, critical=True)
+BEST = SLOClass("best_effort", deadline=30.0, critical=False)
+
+
+def tiny_app(name="app"):
+    return AppDAG.from_tasks(name, [TaskSpec("t0", ttype=0)])
+
+
+def tiny_stream(name="s", slo=BEST, weight=1.0):
+    return AppStream(name, tiny_app, slo=slo, weight=weight)
+
+
+def small_cluster(n=4, lam=1e-6, base=0.1, mem=8 * GB):
+    model = InterferenceModel(
+        base=np.full((n, 1), base), slope=np.full((n, 1, 1), 0.02)
+    )
+    devices = [
+        Device(did=i, cls=i % n, mem_total=mem, lam=lam, bandwidth=100 * MB)
+        for i in range(n)
+    ]
+    return ClusterState(devices=devices, model=model, horizon=300.0, dt=0.05)
+
+
+def arrival(t, slo, deadline=None, kind="s", est=None, uid=0):
+    s = AppStream(kind, tiny_app, slo=slo)
+    return Arrival(
+        t=t, slo=slo,
+        deadline=t + slo.deadline if deadline is None else deadline,
+        stream=s, uid=uid,
+    )
+
+
+class StubEstimator:
+    """Fixed idle-fleet estimate per workload kind (controller-logic tests)."""
+
+    def __init__(self, ests, n_alive=4):
+        self.ests = ests
+        self._n = n_alive
+
+    def estimate(self, a):
+        return self.ests[a.kind]
+
+    def n_alive(self, t):
+        return self._n
+
+
+# ------------------------------------------------------ arrival processes --
+def test_poisson_arrivals_deterministic():
+    streams = [tiny_stream("a"), tiny_stream("b")]
+    one = poisson_arrivals(streams, 40.0, 10.0, seed=3)
+    two = poisson_arrivals(streams, 40.0, 10.0, seed=3)
+    assert [(a.t, a.kind, a.uid) for a in one] == \
+           [(a.t, a.kind, a.uid) for a in two]
+    other = poisson_arrivals(streams, 40.0, 10.0, seed=4)
+    assert [a.t for a in one] != [a.t for a in other]
+
+
+def test_keyed_streams_are_extensible():
+    """Adding a stream must not reshuffle an existing stream's times (the
+    churn.py common-random-numbers contract): stream 0 at per-stream rate R
+    draws the same times whether or not stream 1 exists."""
+    a = tiny_stream("a")
+    b = tiny_stream("b")
+    solo = poisson_arrivals([a], 20.0, 10.0, seed=0)
+    both = poisson_arrivals([a, b], 40.0, 10.0, seed=0)  # a still gets 20/s
+    assert [x.t for x in solo] == [x.t for x in both if x.kind == "a"]
+
+
+def test_poisson_rate_sanity():
+    n = len(poisson_arrivals([tiny_stream()], 100.0, 50.0, seed=0))
+    assert 100.0 * 50.0 * 0.9 < n < 100.0 * 50.0 * 1.1
+
+
+def test_arrival_deadlines_and_uids():
+    arr = poisson_arrivals(
+        [tiny_stream("c", slo=CRIT), tiny_stream("b", slo=BEST)],
+        30.0, 5.0, seed=1,
+    )
+    assert [a.uid for a in arr] == list(range(len(arr)))
+    assert all(a.t <= b.t for a, b in zip(arr, arr[1:]))
+    for a in arr:
+        assert a.deadline == pytest.approx(a.t + a.slo.deadline)
+    inst = arr[0].instantiate()
+    assert inst.tasks                       # relabelled per-uid DAG instance
+    assert f"#{arr[0].uid}" in next(iter(inst.tasks))
+
+
+def test_diurnal_density_tracks_the_rate_shape():
+    """phase=0 puts the trough at t=0 (mod period): the half-period around
+    the peak must hold clearly more arrivals than the trough half."""
+    arr = diurnal_arrivals(
+        [tiny_stream()], 5.0, 120.0, 40.0, period=20.0, phase=0.0, seed=2,
+    )
+    ts = np.array([a.t for a in arr])
+    phase = np.mod(ts, 20.0)
+    trough = np.sum((phase < 5.0) | (phase >= 15.0))
+    peak = np.sum((phase >= 5.0) & (phase < 15.0))
+    assert peak > 3 * trough
+    assert arr == sorted(arr, key=lambda a: a.t)
+
+
+def test_trace_replay_orders_and_overrides_deadlines():
+    streams = [tiny_stream("a", slo=CRIT), tiny_stream("b", slo=BEST)]
+    rows = [(3.0, "b"), (1.0, "a", 9.5), (2.0, "b")]
+    arr = trace_replay(rows, streams)
+    assert [a.t for a in arr] == [1.0, 2.0, 3.0]
+    assert [a.uid for a in arr] == [0, 1, 2]
+    assert arr[0].deadline == 9.5                       # explicit override
+    assert arr[1].deadline == pytest.approx(2.0 + BEST.deadline)
+    assert arr[0].slo.critical and not arr[1].slo.critical
+
+
+# --------------------------------------------------------- admission queue --
+def test_capacity_shed_and_ledger():
+    ctl = AdmissionController(
+        AdmissionConfig(queue_cap=2), StubEstimator({"s": 0.1})
+    )
+    assert ctl.offer(arrival(0.0, BEST, uid=0), 0.0)
+    assert ctl.offer(arrival(0.0, BEST, uid=1), 0.0)
+    assert not ctl.offer(arrival(0.0, BEST, uid=2), 0.0)
+    assert ctl.shed_log[-1].reason == "capacity"
+    wave = ctl.pop_wave(0.0)
+    assert [a.uid for a in wave] == [0, 1]
+    assert ctl.offered == 3 and ctl.dispatched == 2 and ctl.shed == 1
+    ctl.assert_drained()
+
+
+def test_critical_evicts_latest_deadline_best_effort():
+    ctl = AdmissionController(
+        AdmissionConfig(queue_cap=2), StubEstimator({"s": 0.1})
+    )
+    ctl.offer(arrival(0.0, BEST, deadline=20.0, uid=0), 0.0)
+    ctl.offer(arrival(0.0, BEST, deadline=40.0, uid=1), 0.0)
+    assert ctl.offer(arrival(0.0, CRIT, uid=2), 0.0)    # full queue: evict
+    rec = ctl.shed_log[-1]
+    assert rec.reason == "evicted" and rec.uid == 1     # latest deadline out
+    wave = ctl.pop_wave(0.0)
+    assert [a.uid for a in wave] == [2, 0]              # critical first
+    ctl.assert_drained()
+
+
+def test_deadline_shed_uses_idle_estimate():
+    ctl = AdmissionController(
+        AdmissionConfig(queue_cap=8), StubEstimator({"s": 5.0})
+    )
+    assert not ctl.offer(arrival(0.0, CRIT, deadline=1.0), 0.0)
+    assert ctl.shed_log[-1].reason == "deadline"
+    # same workload with enough slack is admitted
+    assert ctl.offer(arrival(0.0, CRIT, deadline=6.0), 0.0)
+
+
+def test_stale_entries_shed_at_dequeue():
+    ctl = AdmissionController(
+        AdmissionConfig(queue_cap=8), StubEstimator({"s": 1.0})
+    )
+    assert ctl.offer(arrival(0.0, BEST, deadline=10.0), 0.0)
+    wave = ctl.pop_wave(20.0)                           # way past deadline
+    assert wave == []
+    assert ctl.shed_log[-1].reason == "stale"
+    ctl.assert_drained()
+
+
+def test_no_admission_baseline_never_sheds():
+    ctl = AdmissionController(
+        AdmissionConfig(queue_cap=None, shed=False),
+        StubEstimator({"s": 50.0}),
+    )
+    for i in range(200):
+        assert ctl.offer(arrival(0.0, BEST, deadline=0.5, uid=i), 0.0)
+    assert ctl.shed == 0
+    assert len(ctl.pop_wave(100.0)) == 200
+    ctl.assert_drained()
+
+
+def test_assert_drained_catches_leftovers():
+    ctl = AdmissionController(
+        AdmissionConfig(queue_cap=8), StubEstimator({"s": 0.1})
+    )
+    ctl.offer(arrival(0.0, BEST), 0.0)
+    with pytest.raises(RuntimeError, match="not drained"):
+        ctl.assert_drained()
+
+
+def test_estimator_is_idle_fleet_and_cached():
+    cluster = small_cluster()
+    est = PlacementLatencyEstimator(cluster, IBDASHPolicy())
+    a = arrival(0.0, BEST, kind="k")
+    e0 = est.estimate(a)
+    assert np.isfinite(e0) and e0 > 0
+    # loading the REAL fleet must not change the idle-fleet estimate
+    cluster.add_interval(0, 0, 0.0, 100.0, w=50)
+    assert est.estimate(arrival(1.0, BEST, kind="k")) == e0
+
+
+# --------------------------------------------------- property-based tests --
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.floats(0.05, 3.0), st.floats(0.0, 4.0)),
+                min_size=1, max_size=40))
+def test_shed_criticals_are_provably_idle_infeasible(items):
+    """A latency_critical instance is never shed if it could have met its
+    deadline on an idle fleet: every critical ShedRecord (no capacity
+    pressure) must fail the idle-fleet test ``t + est > deadline``."""
+    ests = {f"s{i}": e for i, (e, _) in enumerate(items)}
+    ctl = AdmissionController(
+        AdmissionConfig(queue_cap=None), StubEstimator(ests)
+    )
+    for i, (est, slack) in enumerate(items):
+        ctl.offer(arrival(0.0, CRIT, deadline=slack, kind=f"s{i}", uid=i),
+                  0.0)
+    ctl.pop_wave(0.0)
+    for rec in ctl.shed_log:
+        assert rec.reason in ("deadline", "stale")
+        assert rec.t + rec.est > rec.deadline           # provably infeasible
+        assert rec.est == ests[rec.kind]                # the idle estimate
+    # and the complement: every arrival that COULD meet its deadline ran
+    ok = sum(1 for i, (e, s) in enumerate(items) if e <= s)
+    assert ctl.dispatched == ok
+    ctl.assert_drained()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=60),
+       st.integers(2, 8))
+def test_criticals_never_shed_while_best_effort_queued(flags, cap):
+    """Backpressure ordering: with always-idle-feasible criticals, a
+    latency_critical arrival is only ever capacity-shed when NO best_effort
+    entry remained to evict."""
+    ctl = AdmissionController(
+        AdmissionConfig(queue_cap=cap), StubEstimator({"s": 0.1})
+    )
+    for i, is_crit in enumerate(flags):
+        slo = CRIT if is_crit else BEST
+        ctl.offer(arrival(0.0, slo, deadline=100.0, kind="s", uid=i), 0.0)
+    for rec in ctl.shed_log:
+        if rec.slo == "latency_critical":
+            assert rec.reason == "capacity"
+            assert rec.best_depth == 0     # nothing left to evict
+    ctl.pop_wave(100.0 - 0.2)
+    ctl.assert_drained()
+
+
+def test_hypothesis_installed_in_ci():
+    import os
+
+    if os.environ.get("CI"):
+        assert HAVE_HYPOTHESIS, "CI must run the property tests for real"
+
+
+# ------------------------------------------------- conservation ledger -----
+def test_engine_conservation_identity_holds():
+    cluster = small_cluster()
+    eng = Engine(cluster, make_policy("ibdash"), noise_sigma=0.0)
+    eng.add_arrivals([tiny_app(f"a{i}") for i in range(20)],
+                     [0.1 * i for i in range(20)])
+    eng.drain()                 # asserts admitted == completed + lost + shed
+    s = eng.stats
+    assert s["admitted"] == 20 and s["completed"] == 20
+    assert s["lost"] == 0 and s["shed"] == 0
+
+
+def test_engine_drain_raises_on_counter_drift():
+    cluster = small_cluster()
+    eng = Engine(cluster, make_policy("ibdash"), noise_sigma=0.0)
+    eng.add_arrivals([tiny_app()], [0.0])
+    eng.stats["admitted"] += 1                          # tamper the ledger
+    with pytest.raises(RuntimeError, match="instance-counter drift"):
+        eng.drain()
+
+
+def test_infeasible_arrival_counts_as_lost():
+    """The PR's drift fix: an arrival infeasible at plan time must hit the
+    ``lost`` counter (it used to be marked failed without any accounting)."""
+    cluster = small_cluster(mem=1 * GB)
+    app = AppDAG.from_tasks("big", [TaskSpec("t0", ttype=0,
+                                             mem_bytes=4 * GB)])
+    eng = Engine(cluster, make_policy("ibdash"), noise_sigma=0.0)
+    eng.add_arrivals([app, tiny_app()], [0.0, 0.0])
+    eng.drain()
+    s = eng.stats
+    assert s["admitted"] == 2 and s["completed"] == 1 and s["lost"] == 1
+    assert eng.records[0].failed and not eng.records[1].failed
+
+
+# ------------------------------------------------------- service loop ------
+@pytest.fixture(scope="module")
+def service_run(tmp_path_factory):
+    from repro.api import Orchestrator
+
+    cluster = small_cluster(n=6)
+    orch = Orchestrator(cluster, IBDASHPolicy())
+    streams = [tiny_stream("c", slo=CRIT), tiny_stream("b", slo=BEST)]
+    arr = poisson_arrivals(streams, 60.0, 5.0, seed=5)
+    svc = StreamingOrchestrator(orch, admission=AdmissionConfig(queue_cap=64),
+                                tick=0.25)
+    return svc, svc.run(arr), arr
+
+
+def test_service_conserves_instances(service_run):
+    svc, res, arr = service_run
+    s = res.stats
+    assert s["admitted"] == len(arr)
+    assert s["admitted"] == s["completed"] + s["lost"] + s["shed"]
+    c = res.metrics["counters"]
+    assert c["admitted"] + svc.controller.shed == len(arr)
+    assert c["completed"] + c.get("failed", 0) == svc.controller.dispatched
+
+
+def test_service_e2e_latency_measured_from_arrival(service_run):
+    _, res, _ = service_run
+    h = res.metrics["histograms"]
+    assert h["e2e"]["count"] == res.stats["completed"]
+    assert h["e2e"]["p50"] > 0
+    assert res.p("p99", "latency_critical") >= res.p("p50", "latency_critical")
+    assert res.metrics["gauges"]["placements_per_sec"] > 0
+
+
+def test_service_metrics_export_json(service_run, tmp_path):
+    svc, res, _ = service_run
+    path = tmp_path / "metrics.json"
+    svc.metrics.to_json(str(path))
+    data = json.loads(path.read_text())
+    assert set(data) == {"counters", "gauges", "histograms", "samples"}
+    assert data["samples"], "interval sampler produced no rows"
+    assert all("t" in row and "queue_depth" in row for row in data["samples"])
+
+
+def test_no_admission_baseline_runs_everything():
+    from repro.api import Orchestrator
+
+    cluster = small_cluster(n=4)
+    orch = Orchestrator(cluster, IBDASHPolicy())
+    arr = poisson_arrivals([tiny_stream("b", slo=BEST)], 40.0, 3.0, seed=9)
+    svc = StreamingOrchestrator(orch, admission=None)
+    res = svc.run(arr)
+    assert res.stats["shed"] == 0
+    assert res.stats["completed"] == len(arr)
+
+
+def test_auto_degrade_policy():
+    from repro.stream.service import _auto_degrade
+
+    d = _auto_degrade(IBDASHPolicy(gamma=3))
+    assert isinstance(d, IBDASHPolicy) and d.cfg.gamma == 0
+    assert _auto_degrade(make_policy("random")) is None
+    assert _auto_degrade(IBDASHPolicy(gamma=0)) is None
+
+
+def test_run_one_stream_scenario():
+    from repro.api import SimConfig, run_one
+
+    cfg = SimConfig(scenario="stream", n_devices=24, n_cycles=1,
+                    cycle_len=4.0, stream_rate=30.0, seed=0)
+    res = run_one("ibdash", cfg)
+    assert res.scenario == "stream"
+    st_res = res.stream
+    assert st_res.stats["admitted"] == st_res.n_arrivals
+    assert st_res.metrics["counters"]["completed"] == st_res.stats["completed"]
+
+
+def test_serving_fleet_admission_path():
+    from repro.serve.scheduler import ServingFleet, serving_interference_model
+
+    fleet = ServingFleet(serving_interference_model(), n_replicas=6,
+                         horizon=40.0)
+    res = fleet.run(n_requests=80, arrival_window=8.0,
+                    admission=AdmissionConfig(queue_cap=32))
+    sr = res.stream
+    assert sr.n_arrivals == 80
+    assert sr.stats["admitted"] == sr.stats["completed"] \
+        + sr.stats["lost"] + sr.stats["shed"]
+    assert np.isfinite(sr.p("p99", "latency_critical"))
+
+
+# ------------------------------------------------------ metrics registry ---
+def test_histogram_exact_quantiles():
+    h = MetricsRegistry().histogram("x")
+    for v in range(1, 101):
+        h.observe(float(v))
+    assert h.quantile(0.5) == pytest.approx(50.5)
+    s = h.summary()
+    assert s["count"] == 100 and s["max"] == 100.0
+    assert s["p99"] == pytest.approx(np.quantile(np.arange(1.0, 101.0), 0.99))
+
+
+def test_registry_samples_counters_and_gauges():
+    m = MetricsRegistry()
+    m.counter("a").inc(3)
+    m.gauge("g").set(1.5)
+    row = m.sample(2.0)
+    assert row == {"t": 2.0, "a": 3, "g": 1.5}
+    m.counter("a").inc()
+    m.sample(3.0)
+    assert m.snapshot()["samples"][1]["a"] == 4
