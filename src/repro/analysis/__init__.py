@@ -1,0 +1,49 @@
+"""repro.analysis — the orchestration-contract linter.
+
+Statically enforces the repo's load-bearing invariants (see each rule's
+docstring for the contract and the PR that established it):
+
+  * ``rng-discipline``   — per-(seed, id) common-random-number streams
+  * ``policy-purity``    — pure ``decide``/``decide_batch``, mutate only
+                           via ``cluster.apply``
+  * ``snapshot-schema``  — the declared FleetSnapshot pytree leaf schema
+  * ``jit-hygiene``      — no host syncs / traced branching in jitted
+                           kernels
+  * ``deprecation``      — no scalar-bandwidth shims; tier/link-matrix API
+  * ``registry-parity``  — every registered scheme has a test-suite pin
+
+Run ``python -m repro.analysis src tests benchmarks examples``; suppress a
+deliberate finding with ``# repro-lint: disable=<rule>`` on its line (plus
+a justification comment) or ``# repro-lint: disable-file=<rule>``.
+"""
+from .framework import (
+    Analyzer,
+    FileContext,
+    Finding,
+    LintConfig,
+    LintReport,
+    ProjectContext,
+    Rule,
+    RuleSettings,
+    available_rules,
+    register_rule,
+    rule_class,
+)
+from .reporters import render_json, render_text, report_dict
+
+__all__ = [
+    "Analyzer",
+    "FileContext",
+    "Finding",
+    "LintConfig",
+    "LintReport",
+    "ProjectContext",
+    "Rule",
+    "RuleSettings",
+    "available_rules",
+    "register_rule",
+    "rule_class",
+    "render_json",
+    "render_text",
+    "report_dict",
+]

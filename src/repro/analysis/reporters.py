@@ -1,0 +1,36 @@
+"""Text and JSON reporters for lint reports."""
+from __future__ import annotations
+
+import json
+from typing import Dict
+
+from .framework import LintReport
+
+__all__ = ["render_text", "render_json", "report_dict"]
+
+
+def render_text(report: LintReport) -> str:
+    lines = [f.format() for f in report.findings]
+    lines.append(
+        f"{len(report.findings)} finding(s) "
+        f"({report.errors} error(s), {report.warnings} warning(s)), "
+        f"{report.suppressed} suppressed, "
+        f"{report.files_scanned} file(s) scanned"
+    )
+    return "\n".join(lines)
+
+
+def report_dict(report: LintReport) -> Dict[str, object]:
+    return {
+        "version": 1,
+        "files_scanned": report.files_scanned,
+        "rules_run": list(report.rules_run),
+        "errors": report.errors,
+        "warnings": report.warnings,
+        "suppressed": report.suppressed,
+        "findings": [f.to_dict() for f in report.findings],
+    }
+
+
+def render_json(report: LintReport) -> str:
+    return json.dumps(report_dict(report), indent=2, sort_keys=True) + "\n"

@@ -1,0 +1,156 @@
+"""jit-hygiene: no host syncs or traced-value branching inside jitted
+kernels.
+
+The invariant (PR 2): the batched decision kernels in ``core/batched.py``
+run under ``jax.jit`` + ``enable_x64`` and must be bit-identical to their
+scalar numpy twins.  A ``.item()`` / ``float()`` / ``np.asarray`` inside a
+jitted body forces a device->host sync per trace (or a silent
+ConcretizationError much later), and a Python ``if``/``while`` on a traced
+value bakes ONE branch into the compiled artifact — the jitted twin then
+diverges from the scalar twin on exactly the inputs the parity suite
+doesn't cover.
+
+Detection: a function counts as jitted when it is decorated with
+``jit``/``jax.jit``/``partial(jax.jit, ...)`` OR wrapped anywhere in the
+module as ``jax.jit(fn, ...)`` (the lazy-``_jax()`` pattern this repo
+uses).  Parameters named by ``static_argnums``/``static_argnames`` are
+compile-time constants and may be branched on; everything else — including
+values assigned from traced parameters (one forward taint pass) — may not.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from ..astutil import call_name, dotted_name, names_in, param_names, walk_functions
+from ..framework import FileContext, Finding, ProjectContext, Rule, register_rule
+
+_JIT_NAMES = {"jit", "jax.jit"}
+_HOST_CASTS = {"float", "int", "bool", "complex"}
+_NP_PREFIXES = ("np.", "numpy.")
+
+
+def _jit_from_decorator(dec: ast.AST) -> Optional[ast.Call]:
+    """Return the jit Call node (for static args) if this decorator jits,
+    else None; plain ``@jax.jit`` returns a synthetic empty Call."""
+    if dotted_name(dec) in _JIT_NAMES:
+        return ast.Call(func=dec, args=[], keywords=[])
+    if isinstance(dec, ast.Call):
+        name = dotted_name(dec.func)
+        if name in _JIT_NAMES:
+            return dec
+        if name in ("partial", "functools.partial") and dec.args:
+            if dotted_name(dec.args[0]) in _JIT_NAMES:
+                return dec
+    return None
+
+
+def _static_params(fn: ast.FunctionDef, jit_call: ast.Call,
+                   wrapped: bool) -> Set[str]:
+    """Parameter names declared static via static_argnums/static_argnames."""
+    params = param_names(fn)
+    static: Set[str] = set()
+    for kw in jit_call.keywords:
+        if kw.arg == "static_argnames":
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) and isinstance(node.value, str):
+                    static.add(node.value)
+        elif kw.arg == "static_argnums":
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) and isinstance(node.value, int):
+                    idx = node.value
+                    if 0 <= idx < len(params):
+                        static.add(params[idx])
+    return static
+
+
+@register_rule
+class JitHygieneRule(Rule):
+    name = "jit-hygiene"
+    severity = "error"
+    description = (
+        "no .item()/float()/np.asarray host syncs and no Python branching "
+        "on traced values inside @jit kernels (bit-identical batched/scalar "
+        "twins, PR 2)"
+    )
+    # the jitted kernels live in core/batched.py (policy kernels included);
+    # widen via config when new jitted modules appear
+    default_paths = ("src/repro/core",)
+
+    def check_file(self, ctx: FileContext, project: ProjectContext
+                   ) -> Iterator[Finding]:
+        # pass 1: functions wrapped as jax.jit(fn, ...) anywhere in the module
+        wrapped: Dict[str, ast.Call] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) and dotted_name(node.func) in _JIT_NAMES:
+                if node.args and isinstance(node.args[0], ast.Name):
+                    wrapped[node.args[0].id] = node
+        # pass 2: check every jitted function body
+        for fn in walk_functions(ctx.tree):
+            jit_call = None
+            for dec in fn.decorator_list:
+                jit_call = _jit_from_decorator(dec)
+                if jit_call is not None:
+                    break
+            if jit_call is None and fn.name in wrapped:
+                jit_call = wrapped[fn.name]
+            if jit_call is None:
+                continue
+            static = _static_params(fn, jit_call, wrapped=fn.name in wrapped)
+            yield from self._check_body(ctx, fn, static)
+
+    def _check_body(self, ctx: FileContext, fn: ast.FunctionDef,
+                    static: Set[str]) -> Iterator[Finding]:
+        tainted: Set[str] = set(param_names(fn)) - static - {"self"}
+        # one forward taint pass: names assigned from traced values are traced
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                if names_in(node.value) & tainted:
+                    for tgt in node.targets:
+                        for leaf in ast.walk(tgt):
+                            if isinstance(leaf, ast.Name):
+                                tainted.add(leaf.id)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not fn:
+                # closures passed to lax.scan etc: their params are tracers too
+                tainted |= set(param_names(node)) - {"self"}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                name = call_name(node)
+                if isinstance(node.func, ast.Attribute) and node.func.attr == "item":
+                    yield self.finding(
+                        ctx, node,
+                        f"`.item()` inside jitted `{fn.name}` forces a "
+                        "device->host sync per trace; keep the value on "
+                        "device (jnp.where / lax.cond)",
+                    )
+                elif name in _HOST_CASTS and node.args and not all(
+                    isinstance(a, ast.Constant) for a in node.args
+                ):
+                    if names_in(node.args[0]) & tainted:
+                        yield self.finding(
+                            ctx, node,
+                            f"`{name}()` on a traced value inside jitted "
+                            f"`{fn.name}` is a concretization/host sync; use "
+                            "jnp casts (`.astype`) instead",
+                        )
+                elif name and name.startswith(_NP_PREFIXES):
+                    if any(names_in(a) & tainted for a in node.args):
+                        yield self.finding(
+                            ctx, node,
+                            f"numpy call `{name}()` on a traced value inside "
+                            f"jitted `{fn.name}` leaves the device; use the "
+                            "jnp equivalent",
+                        )
+            elif isinstance(node, (ast.If, ast.While)):
+                hot = names_in(node.test) & tainted
+                if hot:
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    yield self.finding(
+                        ctx, node,
+                        f"Python `{kind}` on traced value(s) "
+                        f"{sorted(hot)} inside jitted `{fn.name}` bakes one "
+                        "branch into the compiled kernel — use jnp.where / "
+                        "lax.cond / lax.scan (or declare the argument "
+                        "static_argnums)",
+                    )

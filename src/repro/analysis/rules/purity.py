@@ -1,0 +1,113 @@
+"""policy-purity: ``decide``/``decide_batch`` bodies must stay pure.
+
+The invariant (PR 1): planning and state mutation are split — a policy is
+a pure function ``PolicyContext -> TaskDecision`` and the ONLY blessed
+mutation path is ``cluster.apply(plan)`` (undoable, outside the policy).
+A policy that calls a cluster mutator or writes through its context
+corrupts speculative what-if sweeps, breaks batched==scalar parity (the
+batched kernel would miss the side effect), and poisons DRL rollouts that
+replay the same snapshot.
+
+Flags, inside any function named ``decide``/``decide_batch``:
+  * calls to the cluster mutators ``apply``, ``add_interval``,
+    ``cancel_from``, ``mark_down``/``mark_up``, ``set_bandwidth``,
+    ``install_forecast``, ``refresh_topology``, ``undo`` on any receiver
+    other than ``self`` (stateful policies may advance their OWN rng or
+    cursor — that is defined row-order state, not fleet state);
+  * attribute/subscript stores through a non-``self`` parameter
+    (``ctx.total = ...``, ``batch.fleet.alive[0] = ...``);
+  * ``object.__setattr__(ctx, ...)`` back-doors into frozen contexts.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from ..astutil import dotted_name, param_names, walk_functions
+from ..framework import FileContext, Finding, ProjectContext, Rule, register_rule
+
+MUTATORS = frozenset({
+    "apply",
+    "add_interval",
+    "cancel_from",
+    "mark_down",
+    "mark_up",
+    "set_bandwidth",
+    "install_forecast",
+    "refresh_topology",
+    "undo",
+})
+
+_POLICY_METHODS = ("decide", "decide_batch")
+
+
+def _root_name(node: ast.AST):
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+@register_rule
+class PolicyPurityRule(Rule):
+    name = "policy-purity"
+    severity = "error"
+    description = (
+        "decide/decide_batch may not call cluster mutators or assign "
+        "through their context/snapshot arguments (pure orchestrate vs "
+        "mutating apply, PR 1)"
+    )
+    default_paths = ("",)
+
+    def check_file(self, ctx: FileContext, project: ProjectContext
+                   ) -> Iterator[Finding]:
+        for fn in walk_functions(ctx.tree):
+            if fn.name not in _POLICY_METHODS:
+                continue
+            params: Set[str] = set(param_names(fn))
+            foreign = params - {"self", "cls"}
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    yield from self._check_call(ctx, fn, node, foreign)
+                elif isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                    targets = (
+                        node.targets if isinstance(node, ast.Assign)
+                        else [node.target]
+                    )
+                    for tgt in targets:
+                        if isinstance(tgt, (ast.Attribute, ast.Subscript)):
+                            root = _root_name(tgt)
+                            if root in foreign:
+                                yield self.finding(
+                                    ctx, tgt,
+                                    f"`{fn.name}` stores through its argument "
+                                    f"`{root}` — contexts/snapshots are frozen "
+                                    "read-only views; a policy must return a "
+                                    "decision, not mutate its inputs",
+                                )
+
+    def _check_call(self, ctx: FileContext, fn: ast.FunctionDef,
+                    call: ast.Call, foreign: Set[str]) -> Iterator[Finding]:
+        func = call.func
+        if isinstance(func, ast.Attribute) and func.attr in MUTATORS:
+            # only a method on the policy ITSELF (bare `self.x()`) is own
+            # state; `self.cluster.apply()` still mutates the fleet
+            bare_self = (
+                isinstance(func.value, ast.Name)
+                and func.value.id in ("self", "cls")
+            )
+            recv = _root_name(func.value) or dotted_name(func.value) or "<expr>"
+            if not bare_self:
+                yield self.finding(
+                    ctx, call,
+                    f"`{fn.name}` calls cluster mutator `{recv}.{func.attr}()` "
+                    "— placement is pure; only `cluster.apply(plan)` outside "
+                    "the policy may commit state",
+                )
+        elif dotted_name(func) == "object.__setattr__" and call.args:
+            first = call.args[0]
+            if isinstance(first, ast.Name) and first.id in foreign:
+                yield self.finding(
+                    ctx, call,
+                    f"`{fn.name}` writes into frozen argument "
+                    f"`{first.id}` via object.__setattr__",
+                )

@@ -25,7 +25,7 @@ import threading
 import time
 import zlib
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -33,6 +33,11 @@ import numpy as np
 from ..core.availability import gang_failure_rate, young_daly_interval
 
 __all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]
+
+# Manifest timestamps come from an injectable clock so tests (and replayed
+# sims, which own virtual time) can produce bit-identical checkpoints;
+# ``time.time`` stays the production default.
+Clock = Callable[[], float]
 
 
 def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
@@ -46,7 +51,8 @@ def _crc(a: np.ndarray) -> int:
 
 
 def save_checkpoint(path: str, tree: Any, step: int,
-                    extra: Optional[Dict[str, Any]] = None) -> str:
+                    extra: Optional[Dict[str, Any]] = None, *,
+                    clock: Clock = time.time) -> str:
     """Atomically write one checkpoint directory ``<path>/step_<n>``."""
     os.makedirs(path, exist_ok=True)
     final = os.path.join(path, f"step_{step:08d}")
@@ -55,7 +61,7 @@ def save_checkpoint(path: str, tree: Any, step: int,
         arrs, _ = _flatten(tree)
         manifest = {
             "step": int(step),
-            "time": time.time(),
+            "time": float(clock()),
             "leaves": {
                 k: {"shape": list(v.shape), "dtype": str(v.dtype), "crc": _crc(v)}
                 for k, v in arrs.items()
@@ -137,6 +143,7 @@ class CheckpointManager:
     fleet_lams: Sequence[float] = (1e-5,)
     async_save: bool = False
     keep: int = 3
+    clock: Clock = time.time      # manifest timestamps (inject for tests)
 
     _last_save_t: float = field(default=0.0, init=False)
     _write_cost: float = field(default=30.0, init=False)   # prior estimate, s
@@ -164,7 +171,7 @@ class CheckpointManager:
         t0 = time.monotonic()
         try:
             for d in self.replica_dirs:
-                save_checkpoint(d, host_tree, step, extra)
+                save_checkpoint(d, host_tree, step, extra, clock=self.clock)
                 self._gc(d)
         except Exception as e:
             self._errors.append(str(e))

@@ -40,6 +40,7 @@ from typing import List, Tuple
 import numpy as np
 
 __all__ = [
+    "FLEET_SNAPSHOT_SCHEMA",
     "FleetSnapshot",
     "BatchedPolicyContext",
     "BatchedDecision",
@@ -55,6 +56,31 @@ __all__ = [
 # win, so decide_batch implementations fall back to the (bit-identical)
 # per-row scalar rule.
 BATCH_KERNEL_MIN_ROWS = 8
+
+# THE declarative FleetSnapshot leaf schema — the single source of truth the
+# dataclass declaration, the pytree flattener (which iterates ``fields()``,
+# so field order IS leaf order), every construction site, and the
+# ``snapshot-schema`` lint rule are all checked against.  The schema has
+# drifted 12 -> 13 -> 15 leaves across PRs 3-5; to add a leaf, extend this
+# tuple AND the dataclass together, then let ``python -m repro.analysis``
+# point at every construction site that needs the new keyword.
+FLEET_SNAPSHOT_SCHEMA: Tuple[str, ...] = (
+    "t",
+    "classes",
+    "lams",
+    "bandwidths",
+    "tiers",
+    "link_bw",
+    "mem_total",
+    "join_times",
+    "alive",
+    "surv_grid",
+    "survival",
+    "counts",
+    "queue_len",
+    "base",
+    "slope",
+)
 
 
 @dataclass(frozen=True)
@@ -97,6 +123,27 @@ class FleetSnapshot:
     @property
     def n_types(self) -> int:
         return int(self.counts.shape[1])
+
+    def validate(self) -> "FleetSnapshot":
+        """Runtime twin of the ``snapshot-schema`` lint rule: assert this
+        snapshot's leaf count and order match
+        :data:`FLEET_SNAPSHOT_SCHEMA` exactly.
+
+        The pytree flattener iterates ``fields()``, so dataclass field
+        order IS pytree leaf order — checking the field tuple checks what
+        every jitted kernel will see.  Called once per
+        ``ClusterState.snapshot()`` under ``__debug__`` (``python -O``
+        strips it from hot production runs).  Returns ``self`` so call
+        sites can chain."""
+        names = tuple(f.name for f in fields(self))
+        if names != FLEET_SNAPSHOT_SCHEMA:
+            raise TypeError(
+                f"FleetSnapshot leaf drift: instance flattens to "
+                f"{list(names)} but FLEET_SNAPSHOT_SCHEMA declares "
+                f"{list(FLEET_SNAPSHOT_SCHEMA)}; update the schema, the "
+                "dataclass, and every construction site together"
+            )
+        return self
 
 
 @dataclass(frozen=True)

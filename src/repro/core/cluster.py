@@ -449,7 +449,7 @@ class ClusterState:
             else:
                 surv_grid = self.forecast.grid()
                 survival = self.forecast.sample(t)
-        return FleetSnapshot(
+        snap = FleetSnapshot(
             t=t,
             classes=self._classes,
             lams=self._lams,
@@ -466,6 +466,11 @@ class ClusterState:
             base=self.model.base,
             slope=self.model.slope,
         )
+        if __debug__:
+            # runtime twin of the snapshot-schema lint rule: leaf drift
+            # fails HERE, not as a wrong tensor inside a jitted kernel
+            snap.validate()
+        return snap
 
     # -- the one blessed mutation path ----------------------------------------
     def apply(self, plan) -> ApplyToken:

@@ -368,7 +368,7 @@ def _seg_counts(cfg) -> Tuple[int, ...]:
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, probes: bool = True,
              **variant) -> Dict[str, Any]:
-    t0 = time.time()
+    t0 = time.perf_counter()
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     n_chips = int(np.prod(mesh.devices.shape))
     rec: Dict[str, Any] = {
@@ -380,9 +380,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, probes: bool = True,
             # ---- full compile: the dry-run proof (sharding + memory) --------
             cfg, fn, args, info = build_lowerable(arch, shape_name, mesh, **variant)
             lowered = fn.lower(*args)
-            t_lower = time.time()
+            t_lower = time.perf_counter()
             compiled = lowered.compile()
-            t_compile = time.time()
+            t_compile = time.perf_counter()
             mem = compiled.memory_analysis()
             full = _analyze(compiled)
 
@@ -447,7 +447,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, probes: bool = True,
     except Exception as e:  # failures here are bugs in the system
         rec.update({"status": "fail", "error": f"{type(e).__name__}: {e}",
                     "trace": traceback.format_exc()[-2000:]})
-    rec["total_s"] = round(time.time() - t0, 2)
+    rec["total_s"] = round(time.perf_counter() - t0, 2)
     return rec
 
 

@@ -79,7 +79,7 @@ def train(
     jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
 
     losses = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     s = start_step
     it = iter(data)
     while s < steps:
@@ -97,7 +97,7 @@ def train(
         losses.append(loss)
         s += 1
         if s % log_every == 0 or s == steps:
-            dt = (time.time() - t0) / max(s - start_step, 1)
+            dt = (time.perf_counter() - t0) / max(s - start_step, 1)
             print(f"[train] step {s:5d}  loss {loss:7.4f}  "
                   f"grad_norm {float(metrics['grad_norm']):8.3f}  {dt*1e3:7.1f} ms/step")
         if mgr.maybe_save((params, opt_state), s):

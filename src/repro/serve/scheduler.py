@@ -127,10 +127,10 @@ class ServingFleet:
             lifetime = rng.exponential(1 / lam) if lam > 0 else float("inf")
             devices.append(Device(
                 did=i, cls=cls, mem_total=hbm_bytes, lam=lam,
-                bandwidth=link_bw, alive_until=lifetime,
+                alive_until=lifetime,
                 tier=int(tiers[i]) if tiers is not None else 0,
-                up_bw=float(up_bw[i]) if up_bw is not None else None,
-                down_bw=float(down_bw[i]) if down_bw is not None else None,
+                up_bw=float(up_bw[i]) if up_bw is not None else link_bw,
+                down_bw=float(down_bw[i]) if down_bw is not None else link_bw,
             ))
         self.cluster = ClusterState(
             devices=devices, model=interference, horizon=horizon, dt=0.02,

@@ -334,7 +334,8 @@ def make_cluster(
                 cls=cls,
                 mem_total=dc.mem_gb * GB,
                 lam=lam,
-                bandwidth=dc.bandwidth,
+                up_bw=dc.bandwidth,
+                down_bw=dc.bandwidth,
                 join_time=0.0,
                 alive_until=sample_lifetime(lam, rng),
             )

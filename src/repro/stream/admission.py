@@ -90,8 +90,7 @@ def _idle_clone(cluster: ClusterState) -> ClusterState:
     devices = [
         Device(
             did=d.did, cls=d.cls, mem_total=d.mem_total, lam=d.lam,
-            bandwidth=d.bandwidth, tier=d.tier, up_bw=d.up_bw,
-            down_bw=d.down_bw,
+            tier=d.tier, up_bw=d.up_bw, down_bw=d.down_bw,
         )
         for d in cluster.devices
     ]

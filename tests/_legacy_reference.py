@@ -1,3 +1,6 @@
+# repro-lint: disable-file=deprecation — this module IS the frozen seed
+# reference: it must keep using the scalar-bandwidth arithmetic verbatim so
+# the parity suites can replay the original placements bit-for-bit.
 """Verbatim copy of the SEED's mutate-inside-``place()`` schedulers.
 
 The production code now routes every scheme through the pure

@@ -1,0 +1,10 @@
+"""CLEAN fixture for deprecation: the tier-aware link-matrix API."""
+
+
+def build_fleet(Device, cluster, out_bytes, model_bytes):
+    d = Device(did=0, cls=0, mem_total=1.0, lam=0.0,
+               tier=1, up_bw=8e6, down_bw=40e6)
+    link = cluster.link_bw()                   # (D, D) bottleneck matrix
+    tr = out_bytes / link[0, 1]                # priced on the link
+    up = model_bytes / cluster.upload_bw()[1]  # artifact-server link
+    return d, tr, up

@@ -1,0 +1,11 @@
+"""VIOLATING fixture for deprecation: the pre-PR-3 scalar-bandwidth
+surface — symmetric Device shim, receiver-only vector, scalar-priced
+transfer/upload helpers."""
+
+
+def build_fleet(Device, cluster, sched, app):
+    d = Device(did=0, cls=0, mem_total=1.0, lam=0.0, bandwidth=50e6)
+    bw = cluster.bandwidths()                       # receiver-only (D,)
+    up = sched.upload_latency(app, "t0", d, 50e6)   # scalar-priced shim
+    tr = sched.transfer_latency(app, "t0", 0, {}, 50e6)
+    return d, bw, up, tr

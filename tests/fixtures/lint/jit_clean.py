@@ -1,0 +1,20 @@
+"""CLEAN fixture for jit-hygiene: branchless jnp kernels; static
+arguments declared static_argnums may drive Python control flow."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def masked_argmin(queue_len, feasible):
+    return jnp.argmin(jnp.where(feasible, queue_len, jnp.inf), axis=1)
+
+
+def escalation_kernel(total, feasible, n_tiers):
+    picked = jnp.zeros(total.shape[0], jnp.int64)
+    for lv in range(n_tiers):            # static: unrolls at trace time
+        masked = jnp.where(feasible, total, jnp.inf)
+        picked = jnp.argmin(masked, axis=1)
+    return picked
+
+
+escalation = jax.jit(escalation_kernel, static_argnums=(2,))

@@ -1,0 +1,21 @@
+"""VIOLATING fixture for jit-hygiene: host syncs and traced-value
+branching inside jitted kernels (both decorator- and wrapper-jitted)."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def decorated_kernel(scores, threshold):
+    if threshold > 0:                    # Python branch on a traced value
+        return scores.item()             # device -> host sync per trace
+    return float(scores)                 # concretizes the tracer
+
+
+def wrapped_kernel(totals):
+    best = totals.min()
+    while best < 0:                      # traced while-loop
+        best = best + 1
+    return np.asarray(best)              # numpy pulls the value off-device
+
+
+wrapped = jax.jit(wrapped_kernel)

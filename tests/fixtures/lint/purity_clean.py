@@ -1,0 +1,23 @@
+"""CLEAN fixture for policy-purity: pure decide/decide_batch; the caller
+commits with cluster.apply(plan) OUTSIDE the policy, and stateful
+policies may advance only their OWN rng/cursor state."""
+
+
+class PurePolicy:
+    def __init__(self, seed):
+        self.cursor = seed
+
+    def decide(self, ctx):
+        best = int(ctx.feasible_ids[0])
+        self.cursor += 1                     # own state: defined row order
+        return (best,)
+
+    def decide_batch(self, batch):
+        return [self.decide(batch.row(b)) for b in range(batch.n_rows)]
+
+
+def drive(policy, cluster, ctx):
+    plan = policy.decide(ctx)
+    token = cluster.apply(plan)              # the one blessed mutation path
+    cluster.undo(token)
+    return plan

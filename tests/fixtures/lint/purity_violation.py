@@ -1,0 +1,22 @@
+"""VIOLATING fixture for policy-purity: a policy that mutates the fleet
+and writes through its frozen context from inside decide/decide_batch."""
+
+
+class LeakyPolicy:
+    def __init__(self, cluster):
+        self.cluster = cluster
+
+    def decide(self, ctx):
+        plan = self._plan(ctx)
+        self.cluster.apply(plan)              # mutator call inside decide
+        ctx.total = ctx.total * 0.5           # store through frozen context
+        object.__setattr__(ctx, "pf", None)   # frozen back-door
+        return plan
+
+    def decide_batch(self, batch):
+        batch.fleet.alive[0] = False          # store through the snapshot
+        self.cluster.mark_down(0, batch.fleet.t)
+        return [self.decide(batch.row(b)) for b in range(batch.n_rows)]
+
+    def _plan(self, ctx):
+        return ctx

@@ -1,0 +1,9 @@
+"""CLEAN fixture for registry-parity: every injected registry name —
+("ibdash", "mystery_scheme") and ("fail_fast",) — appears in this
+"test suite", so every scheme has a pin."""
+
+
+def test_parity_all_schemes():
+    for policy in ("ibdash", "mystery_scheme"):
+        for recovery in ("fail_fast",):
+            assert policy and recovery

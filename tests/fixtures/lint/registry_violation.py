@@ -1,0 +1,13 @@
+"""VIOLATING fixture for registry-parity: a "test suite" that pins only
+ibdash — any other registered scheme has no batched/scalar parity pin.
+
+The fixture test scans THIS file as the whole test suite with an injected
+registry of ("ibdash", "mystery_scheme") and recoveries ("fail_fast",),
+so "mystery_scheme" must be reported unpinned.
+"""
+
+
+def test_parity():
+    policy = "ibdash"
+    recovery = "fail_fast"
+    assert policy and recovery

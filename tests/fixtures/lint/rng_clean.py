@@ -1,0 +1,17 @@
+"""CLEAN fixture for rng-discipline: one generator per (seed, id) stream,
+derived from explicit seed/SeedSequence arguments; clocks injected."""
+import time
+
+import numpy as np
+
+
+def device_rng(seed, did):
+    # the PR 5 stream-keying contract: adding a device never reshuffles
+    # any other device's draws
+    return np.random.default_rng(np.random.SeedSequence(entropy=(seed, did)))
+
+
+def sample_lifetimes(seed, n, clock=time.monotonic):
+    draws = [device_rng(seed, did).exponential(10.0) for did in range(n)]
+    t0 = clock()
+    return draws, t0

@@ -1,0 +1,15 @@
+"""VIOLATING fixture for rng-discipline: global draws, stdlib random,
+unseeded generators, and a wall-clock read in sim code."""
+import random                      # hidden global state
+
+import numpy as np
+import time
+
+
+def sample_lifetimes(n):
+    jitter = random.random()                  # stdlib global stream
+    noise = np.random.normal(0.0, 1.0, n)     # global np.random draw
+    np.random.seed(0)                         # reseeds everyone's stream
+    rng = np.random.default_rng()             # OS-entropy nondeterminism
+    stamp = time.time()                       # wall clock in simulated code
+    return jitter, noise, rng, stamp

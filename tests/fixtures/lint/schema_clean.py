@@ -1,0 +1,22 @@
+"""CLEAN fixture for snapshot-schema: keyword-only construction carrying
+every leaf of the declared schema, in any keyword order."""
+
+
+def build_snapshot(FleetSnapshot, t, arrs):
+    return FleetSnapshot(
+        t=t,
+        classes=arrs["classes"],
+        lams=arrs["lams"],
+        bandwidths=arrs["bandwidths"],
+        tiers=arrs["tiers"],
+        link_bw=arrs["link_bw"],
+        mem_total=arrs["mem_total"],
+        join_times=arrs["join_times"],
+        alive=arrs["alive"],
+        surv_grid=arrs["surv_grid"],
+        survival=arrs["survival"],
+        counts=arrs["counts"],
+        queue_len=arrs["queue_len"],
+        base=arrs["base"],
+        slope=arrs["slope"],
+    )

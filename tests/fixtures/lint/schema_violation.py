@@ -1,0 +1,11 @@
+"""VIOLATING fixture for snapshot-schema: positional construction and a
+keyword construction that misses leaves — both reproduce the 12->13->15
+leaf-drift hazard."""
+
+
+def build_snapshots(FleetSnapshot, t, classes, lams):
+    # positional: the next leaf insertion silently shifts every later leaf
+    a = FleetSnapshot(t, classes, lams)
+    # keyword but incomplete: drops the other declared leaves on the floor
+    b = FleetSnapshot(t=t, classes=classes, lams=lams)
+    return a, b

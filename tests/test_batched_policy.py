@@ -40,7 +40,7 @@ def small_cluster(n=6, n_types=2, lam=5e-2, mem=8 * GB, bw=100e6, seed=0):
         slope=rng.uniform(0.01, 0.08, (n, n_types, n_types)),
     )
     devices = [
-        Device(did=i, cls=i, mem_total=mem, lam=lam, bandwidth=bw)
+        Device(did=i, cls=i, mem_total=mem, lam=lam, up_bw=bw, down_bw=bw)
         for i in range(n)
     ]
     return ClusterState(devices=devices, model=model, horizon=120.0, dt=0.05)

@@ -53,7 +53,7 @@ def small_cluster(n=4, lam=1e-6, base=None, alive_until=None, horizon=100.0):
         base=base[:, None], slope=np.full((n, 1, 1), 0.05)
     )
     devices = [
-        Device(did=i, cls=i, mem_total=8 * GB, lam=lam, bandwidth=100e6,
+        Device(did=i, cls=i, mem_total=8 * GB, lam=lam, up_bw=100e6, down_bw=100e6,
                alive_until=(alive_until[i] if alive_until is not None
                             else float("inf")))
         for i in range(n)

@@ -60,7 +60,7 @@ def small_cluster(n=4, lam=1e-6, base=None, horizon=100.0, bw=100e6):
         base=base[:, None], slope=np.full((n, 1, 1), 0.05)
     )
     devices = [
-        Device(did=i, cls=i, mem_total=8 * GB, lam=lam, bandwidth=bw)
+        Device(did=i, cls=i, mem_total=8 * GB, lam=lam, up_bw=bw, down_bw=bw)
         for i in range(n)
     ]
     return ClusterState(devices=devices, model=model, horizon=horizon, dt=0.05)

@@ -98,7 +98,8 @@ def test_link_matrix_bottleneck_rule():
 def test_scalar_bandwidth_is_symmetric_shim():
     """Device(bandwidth=B) == Device(up_bw=B, down_bw=B); up/down-only
     construction back-fills the deprecated scalar with min(up, down)."""
-    d = Device(did=0, cls=0, mem_total=GB, lam=0.0, bandwidth=50 * MB)
+    # the deprecated shim is exactly what this test pins down
+    d = Device(did=0, cls=0, mem_total=GB, lam=0.0, bandwidth=50 * MB)  # repro-lint: disable=deprecation
     assert d.up_bw == d.down_bw == 50 * MB
     d2 = Device(did=1, cls=0, mem_total=GB, lam=0.0,
                 up_bw=8 * MB, down_bw=40 * MB)
@@ -351,8 +352,8 @@ def test_failed_app_cancels_unstarted_provisional_intervals():
     never-started later stages is removed (no ghost residue)."""
     model = InterferenceModel(base=np.array([[0.1]]),
                               slope=np.full((1, 1, 1), 0.05))
-    dev = Device(did=0, cls=0, mem_total=8 * GB, lam=1e-3,
-                 bandwidth=100 * MB, alive_until=0.05)   # dies mid-task
+    dev = Device(did=0, cls=0, mem_total=8 * GB, lam=1e-3, up_bw=100 * MB,
+                 down_bw=100 * MB, alive_until=0.05)   # dies mid-task
     c = ClusterState(devices=[dev], model=model, horizon=60.0, dt=0.05)
     eng = Engine(c, make_policy("round_robin"), noise_sigma=0.0)
     eng.add_arrivals([chain_app(out_bytes=1 * MB)], [0.0])

@@ -19,7 +19,7 @@ def make_cluster(n=4, lam=(1e-6, 1e-6, 1e-6, 1e-6), base=(0.1, 0.2, 0.3, 0.4),
         slope=np.full((n, 1, 1), 0.05),
     )
     devices = [
-        Device(did=i, cls=i, mem_total=mem, lam=lam[i], bandwidth=bw)
+        Device(did=i, cls=i, mem_total=mem, lam=lam[i], up_bw=bw, down_bw=bw)
         for i in range(n)
     ]
     return ClusterState(devices=devices, model=model, horizon=100.0, dt=0.05)

@@ -36,7 +36,7 @@ def small_cluster(n=4, lam=1e-6, mem=8 * GB, bw=100e6):
         slope=np.full((n, 1, 1), 0.05),
     )
     devices = [
-        Device(did=i, cls=i, mem_total=mem, lam=lam, bandwidth=bw)
+        Device(did=i, cls=i, mem_total=mem, lam=lam, up_bw=bw, down_bw=bw)
         for i in range(n)
     ]
     return ClusterState(devices=devices, model=model, horizon=100.0, dt=0.05)
@@ -294,7 +294,7 @@ def test_ibdash_replication_parity_flaky_fleet():
     )
     mk = lambda: ClusterState(
         devices=[Device(did=i, cls=i, mem_total=8 * GB, lam=5e-1,
-                        bandwidth=100e6) for i in range(4)],
+                        up_bw=100e6, down_bw=100e6) for i in range(4)],
         model=model, horizon=100.0, dt=0.05,
     )
     from repro.core.orchestrator import IBDASHConfig

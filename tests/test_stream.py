@@ -48,7 +48,7 @@ def small_cluster(n=4, lam=1e-6, base=0.1, mem=8 * GB):
         base=np.full((n, 1), base), slope=np.full((n, 1, 1), 0.02)
     )
     devices = [
-        Device(did=i, cls=i % n, mem_total=mem, lam=lam, bandwidth=100 * MB)
+        Device(did=i, cls=i % n, mem_total=mem, lam=lam, up_bw=100 * MB, down_bw=100 * MB)
         for i in range(n)
     ]
     return ClusterState(devices=devices, model=model, horizon=300.0, dt=0.05)
