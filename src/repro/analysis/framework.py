@@ -22,20 +22,25 @@ The framework is deliberately small and dependency-free:
   * Suppressions — ``# repro-lint: disable=<rule>[,<rule>...]`` on the
     finding's line silences it; ``# repro-lint: disable-file=<rule>``
     anywhere in the file silences the whole module.  ``all`` matches every
-    rule.  Suppressed findings are counted, not lost.
+    rule.  Suppressed findings are counted, not lost — and a suppression
+    that silences *nothing* is itself reported as a ``useless-suppression``
+    warning (stale disables may not rot in place, PR 8).
   * :class:`Analyzer` — walks the paths, parses each ``*.py`` once, runs
-    the scoped rules, applies suppressions, and returns findings sorted by
-    location.  A file that fails to parse yields a ``parse-error`` finding
-    instead of crashing the run.
+    the scoped rules, applies suppressions (to per-file AND finalize-time
+    findings), and returns findings sorted by location.  A file that fails
+    to parse yields a ``parse-error`` finding instead of crashing the run.
 """
 from __future__ import annotations
 
 import ast
 import fnmatch
+import io
 import os
 import re
+import time
+import tokenize
 from dataclasses import dataclass, field, replace
-from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple, Type
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Set, Tuple, Type
 
 __all__ = [
     "Finding",
@@ -45,6 +50,7 @@ __all__ = [
     "RuleSettings",
     "LintConfig",
     "Analyzer",
+    "SuppressionTable",
     "register_rule",
     "available_rules",
     "SEVERITIES",
@@ -111,6 +117,7 @@ class ProjectContext:
 
     files: List[FileContext] = field(default_factory=list)
     store: Dict[str, object] = field(default_factory=dict)
+    root: str = ""                # analyzer root (abs path of rel paths)
 
 
 class Rule:
@@ -237,23 +244,83 @@ def _excluded(path: str, patterns: Tuple[str, ...]) -> bool:
     return any(fnmatch.fnmatch(path, pat) for pat in patterns)
 
 
-def _parse_suppressions(source: str) -> Tuple[Dict[int, set], set]:
-    """Return ({line -> {rule names}} for inline disables, {file-level rules})."""
-    inline: Dict[int, set] = {}
-    file_level: set = set()
-    for i, line in enumerate(source.splitlines(), start=1):
-        if "repro-lint" not in line:
-            continue
-        m = _SUPPRESS_FILE_RE.search(line)
-        if m:
-            file_level |= {r.strip() for r in m.group(1).split(",") if r.strip()}
-            continue
-        m = _SUPPRESS_RE.search(line)
-        if m:
-            inline.setdefault(i, set()).update(
-                r.strip() for r in m.group(1).split(",") if r.strip()
-            )
-    return inline, file_level
+def _iter_comments(source: str) -> Iterator[Tuple[int, str]]:
+    """(lineno, text) of each comment token; falls back to a raw line scan
+    when the source does not tokenize (the caller already parsed it, so
+    this is belt-and-braces for exotic encodings)."""
+    try:
+        toks = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        for i, line in enumerate(source.splitlines(), start=1):
+            if "#" in line:
+                yield i, line[line.index("#"):]
+        return
+    for tok in toks:
+        if tok.type == tokenize.COMMENT:
+            yield tok.start[0], tok.string
+
+
+@dataclass
+class _SuppEntry:
+    """One ``repro-lint: disable[-file]=`` comment: where it sits, which
+    rules it names, and how many findings each named rule suppressed."""
+
+    line: int                     # 1-based line of the comment itself
+    file_level: bool
+    hits: Dict[str, int]          # rule name (or "all") -> findings silenced
+
+
+class SuppressionTable:
+    """All suppression comments of one file, with hit accounting."""
+
+    def __init__(self, source: str):
+        self.entries: List[_SuppEntry] = []
+        # only real COMMENT tokens count — a disable marker inside a string
+        # literal (e.g. test code building fixture sources) must neither
+        # suppress anything nor be reported as a stale suppression
+        for lineno, comment in _iter_comments(source):
+            if "repro-lint" not in comment:
+                continue
+            m = _SUPPRESS_FILE_RE.search(comment)
+            file_level = bool(m)
+            if not m:
+                m = _SUPPRESS_RE.search(comment)
+            if not m:
+                continue
+            rules = [r.strip() for r in m.group(1).split(",") if r.strip()]
+            if rules:
+                self.entries.append(_SuppEntry(
+                    line=lineno, file_level=file_level,
+                    hits={r: 0 for r in rules},
+                ))
+
+    def suppress(self, fnd: Finding) -> bool:
+        """True (and count the hit) when some entry silences ``fnd``."""
+        hit = False
+        for e in self.entries:
+            if not (e.file_level or e.line == fnd.line):
+                continue
+            for key in (fnd.rule, "all"):
+                if key in e.hits:
+                    e.hits[key] += 1
+                    hit = True
+                    break
+        return hit
+
+    def useless(self, ran_rules: Set[str]) -> Iterator[Tuple[int, str]]:
+        """(line, rule-name) for every named rule that silenced nothing.
+
+        Only rules that actually RAN on this file are judged — a disable
+        for a rule outside this run's selection might be load-bearing."""
+        for e in self.entries:
+            for rule, n in e.hits.items():
+                if n:
+                    continue
+                if rule == "all":
+                    if ran_rules:
+                        yield e.line, rule
+                elif rule in ran_rules:
+                    yield e.line, rule
 
 
 @dataclass
@@ -264,6 +331,7 @@ class LintReport:
     suppressed: int
     files_scanned: int
     rules_run: Tuple[str, ...]
+    elapsed_s: float = 0.0        # wall-clock of the whole run (CI budget log)
 
     @property
     def errors(self) -> int:
@@ -327,12 +395,15 @@ class Analyzer:
 
     # -- driver --------------------------------------------------------------
     def run(self, paths: Iterable[str]) -> LintReport:
+        t0 = time.perf_counter()
         projects: Dict[str, ProjectContext] = {
-            rule.name: ProjectContext() for rule, _, _ in self._rules
+            rule.name: ProjectContext(root=self.root) for rule, _, _ in self._rules
         }
         findings: List[Finding] = []
         suppressed = 0
         n_files = 0
+        supp_tables: Dict[str, SuppressionTable] = {}
+        ran_rules: Dict[str, Set[str]] = {}
         for fp in self._iter_py_files(paths):
             rel = _rel(fp, self.root)
             if _excluded(rel, self.config.exclude):
@@ -349,37 +420,51 @@ class Analyzer:
                     f"could not parse: {e.__class__.__name__}: {e}",
                 ))
                 continue
-            inline, file_level = _parse_suppressions(source)
+            table = supp_tables[rel] = SuppressionTable(source)
+            ran_rules[rel] = set()
             ctx = FileContext(path=rel, source=source, tree=tree)
             for rule, scope, sev_override in self._rules:
                 if not _match_scope(rel, scope):
                     continue
+                ran_rules[rel].add(rule.name)
                 project = projects[rule.name]
                 project.files.append(ctx)
                 for fnd in rule.check_file(ctx, project):
                     if sev_override:
                         fnd = replace(fnd, severity=sev_override)
-                    if self._is_suppressed(fnd, inline, file_level):
+                    if table.suppress(fnd):
                         suppressed += 1
                     else:
                         findings.append(fnd)
+        # finalize-time (cross-file) findings honour suppressions too: the
+        # transitive rules anchor findings at real source lines, and a
+        # justified inline disable must silence those the same way
         for rule, _, sev_override in self._rules:
             for fnd in rule.finalize(projects[rule.name]):
                 if sev_override:
                     fnd = replace(fnd, severity=sev_override)
-                findings.append(fnd)
+                table = supp_tables.get(fnd.path)
+                if table is not None and table.suppress(fnd):
+                    suppressed += 1
+                else:
+                    findings.append(fnd)
+        # a disable that silenced nothing is itself a (warning) finding —
+        # stale suppressions from old fix-up passes may not rot in place
+        for rel, table in supp_tables.items():
+            for line, rule_name in table.useless(ran_rules[rel]):
+                fnd = Finding(
+                    "useless-suppression", "warning", rel, line, 0,
+                    f"suppression `disable={rule_name}` matched no finding "
+                    "of that rule in this run — remove the stale comment "
+                    "(or fix the rule name)",
+                )
+                if not table.suppress(fnd):
+                    findings.append(fnd)
         findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
         return LintReport(
             findings=findings,
             suppressed=suppressed,
             files_scanned=n_files,
             rules_run=tuple(r.name for r, _, _ in self._rules),
+            elapsed_s=time.perf_counter() - t0,
         )
-
-    @staticmethod
-    def _is_suppressed(fnd: Finding, inline: Dict[int, set],
-                       file_level: set) -> bool:
-        if "all" in file_level or fnd.rule in file_level:
-            return True
-        rules = inline.get(fnd.line)
-        return bool(rules and ("all" in rules or fnd.rule in rules))

@@ -8,3 +8,5 @@ from . import schema         # noqa: F401
 from . import jit            # noqa: F401
 from . import deprecation    # noqa: F401
 from . import registry_parity  # noqa: F401
+from . import kernel_hygiene   # noqa: F401
+from . import unit_consistency  # noqa: F401

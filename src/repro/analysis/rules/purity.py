@@ -17,6 +17,13 @@ Flags, inside any function named ``decide``/``decide_batch``:
   * attribute/subscript stores through a non-``self`` parameter
     (``ctx.total = ...``, ``batch.fleet.alive[0] = ...``);
   * ``object.__setattr__(ctx, ...)`` back-doors into frozen contexts.
+
+PR 8 makes the rule *interprocedural*: ``finalize`` builds the project
+call graph (:mod:`..callgraph`) and the bottom-up effect sets
+(:mod:`..effects`), so ``decide -> _helper -> ctx.cluster.apply()`` is a
+finding even though no single body shows both ends — the full call chain
+appears in the message.  The per-file pass above stays as the fallback
+for direct violations (and for files the call graph cannot resolve).
 """
 from __future__ import annotations
 
@@ -24,6 +31,8 @@ import ast
 from typing import Iterator, Set
 
 from ..astutil import dotted_name, param_names, walk_functions
+from ..effects import PARAM_MUTATION, engine_for
+from ..callgraph import summarize_module
 from ..framework import FileContext, Finding, ProjectContext, Rule, register_rule
 
 MUTATORS = frozenset({
@@ -84,6 +93,51 @@ class PolicyPurityRule(Rule):
                                     "read-only views; a policy must return a "
                                     "decision, not mutate its inputs",
                                 )
+
+    def finalize(self, project: ProjectContext) -> Iterator[Finding]:
+        """Transitive pass: flag policy entry points whose *callees* mutate
+        the cluster or the policy's own context arguments."""
+        summaries = []
+        for fctx in project.files:
+            try:
+                summaries.append(
+                    summarize_module(fctx.path, fctx.source, fctx.tree)
+                )
+            except (SyntaxError, RecursionError):  # pragma: no cover
+                continue
+        if not summaries:
+            return
+        engine = engine_for(summaries)
+        emitted: Set[tuple] = set()
+        for entry in sorted(
+            (f for name in _POLICY_METHODS
+             for f in engine.functions_named(name)),
+            key=lambda f: (f.path, f.lineno),
+        ):
+            foreign = set(entry.params) - {"self", "cls"}
+            for eff in engine.effects_of(entry.qualname):
+                if not eff.transitive:
+                    continue   # direct violations belong to check_file
+                if eff.kind == "cluster-mutation":
+                    what = f"calls cluster mutator `{eff.origin}`"
+                elif (eff.kind.startswith(PARAM_MUTATION + ":")
+                        and eff.kind.split(":", 1)[1] in foreign):
+                    what = (
+                        "mutates its argument "
+                        f"`{eff.kind.split(':', 1)[1]}`"
+                    )
+                else:
+                    continue
+                msg = (
+                    f"`{entry.name}` {what} through the call chain "
+                    f"`{eff.render_chain()}` — placement is pure; only "
+                    "`cluster.apply(plan)` outside the policy may commit state"
+                )
+                key = (entry.path, eff.site_line, msg)
+                if key in emitted:
+                    continue
+                emitted.add(key)
+                yield self.finding(entry.path, eff.site_line, msg)
 
     def _check_call(self, ctx: FileContext, fn: ast.FunctionDef,
                     call: ast.Call, foreign: Set[str]) -> Iterator[Finding]:

@@ -11,14 +11,24 @@ the stdlib ``random`` module, unseeded ``default_rng()``, and bare
 ``time.time()`` inside ``src/repro`` all break that contract silently:
 the run still *looks* deterministic until a fleet-size change or a wall
 clock poisons a DRL rollout.
+
+PR 8 adds an interprocedural ``finalize`` pass: a policy entry point
+(``decide``/``decide_batch``) that reaches a global-state draw or a bare
+``time.time()`` *through helpers* is flagged with the full call chain —
+``decide_batch -> util -> np.random.shuffle()``.  The per-file checks
+above remain the fallback for direct violations.
 """
 from __future__ import annotations
 
 import ast
-from typing import Iterator
+from typing import Iterator, Set
 
 from ..astutil import call_name
+from ..callgraph import summarize_module
+from ..effects import engine_for
 from ..framework import FileContext, Finding, ProjectContext, Rule, register_rule
+
+_POLICY_METHODS = ("decide", "decide_batch")
 
 # np.random attributes that are construction/typing, not global-state draws
 _ALLOWED_NP_RANDOM = {
@@ -122,6 +132,55 @@ class RngDisciplineRule(Rule):
                         "interval measurement should use time.perf_counter/"
                         "time.monotonic)",
                     )
+
+    def finalize(self, project: ProjectContext) -> Iterator[Finding]:
+        """Transitive pass: policy entry points reaching global-RNG draws
+        or wall-clock reads through helper chains."""
+        time_paths = tuple(
+            self.options.get(self.TIME_PATHS_OPTION, self.DEFAULT_TIME_PATHS)
+        )
+        summaries = []
+        for fctx in project.files:
+            try:
+                summaries.append(
+                    summarize_module(fctx.path, fctx.source, fctx.tree)
+                )
+            except (SyntaxError, RecursionError):  # pragma: no cover
+                continue
+        if not summaries:
+            return
+        engine = engine_for(summaries)
+        emitted: Set[tuple] = set()
+        for entry in sorted(
+            (f for name in _POLICY_METHODS
+             for f in engine.functions_named(name)),
+            key=lambda f: (f.path, f.lineno),
+        ):
+            check_time = any(entry.path.startswith(p) for p in time_paths)
+            for eff in engine.effects_of(entry.qualname):
+                if not eff.transitive:
+                    continue   # direct draws belong to check_file
+                if eff.kind == "global-rng":
+                    why = (
+                        "draws from hidden global RNG state — draws must come "
+                        "from a per-stream `default_rng(seed)` Generator"
+                    )
+                elif eff.kind == "wall-clock" and check_time:
+                    why = (
+                        "reads the wall clock inside simulated code — the sim "
+                        "owns virtual time; inject a clock parameter"
+                    )
+                else:
+                    continue
+                msg = (
+                    f"`{entry.name}` reaches `{eff.origin}` through the call "
+                    f"chain `{eff.render_chain()}` — {why}"
+                )
+                key = (entry.path, eff.site_line, msg)
+                if key in emitted:
+                    continue
+                emitted.add(key)
+                yield self.finding(entry.path, eff.site_line, msg)
 
     @staticmethod
     def _unseeded(call: ast.Call) -> bool:

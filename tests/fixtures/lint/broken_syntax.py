@@ -1,0 +1,4 @@
+# golden fixture for parse-error resilience: this file deliberately does
+# not parse; the analyzer must report it and keep going
+def oops(:
+    return 1

@@ -1,0 +1,26 @@
+"""Clean twin of kernel_violation: float64 end to end, no callbacks,
+wave sizes padded to one bucket, donation with a matching output."""
+from repro.analysis.kernel_audit import KernelSpec, f64
+
+
+def tidy_kernel(x, acc):
+    return x * 2.0, acc + 1.0
+
+
+def _bucket(B):
+    # pad like repro.core.batched._padded: one compiled shape serves
+    # every wave size in the bucket
+    return 1 << max(B - 1, 0).bit_length()
+
+
+AUDIT_TARGETS = [
+    KernelSpec(
+        name="tidy_kernel",
+        fn=lambda: tidy_kernel,
+        build=lambda p: (f64(_bucket(p["B"]), 4), f64(_bucket(p["B"]))),
+        sweep=({"B": 70}, {"B": 100}),
+        x64=True,
+        donate_argnums=(1,),
+        expected_lowerings=1,
+    ),
+]

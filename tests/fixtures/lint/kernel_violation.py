@@ -1,0 +1,51 @@
+"""Golden violating fixture for kernel-hygiene: four contract breaches
+only a jaxpr-level audit can see — a float32 array constant inside an x64
+kernel, a host debug callback, per-wave recompilation (no row padding),
+and a donated buffer with no matching output."""
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.kernel_audit import KernelSpec, f64
+
+
+def leaky_kernel(x):
+    # float32 weights inside a kernel that must be bit-identical float64
+    w = jnp.asarray([0.5, 2.0, 1.0, 1.0], jnp.float32)
+    jax.debug.print("rows {n}", n=x.shape[0])
+    return (x * w).sum(axis=1)
+
+
+def unpadded_kernel(x):
+    return x * 2.0
+
+
+def hoarder_kernel(x, acc):
+    # acc is donated below, but no output matches its (3,) buffer
+    return x.sum() + acc.sum()
+
+
+AUDIT_TARGETS = [
+    KernelSpec(
+        name="leaky_kernel",
+        fn=lambda: leaky_kernel,
+        build=lambda p: (f64(p["B"], 4),),
+        sweep=({"B": 8},),
+        x64=True,
+    ),
+    KernelSpec(
+        name="unpadded_kernel",
+        fn=lambda: unpadded_kernel,
+        # raw wave sizes straight into the shape: every wave recompiles
+        build=lambda p: (f64(p["B"], 4),),
+        sweep=({"B": 8}, {"B": 9}, {"B": 10}),
+        x64=True,
+        expected_lowerings=1,
+    ),
+    KernelSpec(
+        name="hoarder_kernel",
+        fn=lambda: hoarder_kernel,
+        build=lambda p: (f64(4, 4), f64(3)),
+        sweep=({},),
+        donate_argnums=(1,),
+    ),
+]

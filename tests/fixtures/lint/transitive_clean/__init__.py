@@ -1,0 +1,2 @@
+"""Clean twin of transitive_violation: same call-graph shape, but the
+helpers stay pure and draw from an explicit per-stream Generator."""

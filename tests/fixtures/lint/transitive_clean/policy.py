@@ -1,0 +1,18 @@
+"""Same shape as the violating twin, with pure helpers."""
+from .util import best_plan, note_choice, pick_order
+
+
+class TidyPolicy:
+    def decide(self, ctx):
+        plan = self._helper(ctx)
+        self._note(ctx)
+        return plan
+
+    def _helper(self, ctx):
+        return best_plan(ctx, [0, 1])
+
+    def _note(self, ctx):
+        return note_choice(ctx, 0)
+
+    def decide_batch(self, batch):
+        return pick_order(4, batch.rng)

@@ -1,0 +1,17 @@
+"""Pure helpers: no mutation, no global RNG, no wall clock."""
+import numpy as np
+
+
+def best_plan(ctx, plan):
+    total = sum(plan)
+    return plan if total >= 0 else list(ctx.feasible)
+
+
+def note_choice(ctx, device):
+    # reads only; the decision is RETURNED, never written back
+    return (ctx.t, device)
+
+
+def pick_order(n, rng):
+    # explicit per-stream Generator passed in by the caller
+    return rng.permutation(np.arange(n))

@@ -1,0 +1,3 @@
+"""Transitive-violation fixture package: the policy entry points are
+syntactically clean — every contract breach hides one or two helper calls
+deep, so only the interprocedural effect pass can see it."""

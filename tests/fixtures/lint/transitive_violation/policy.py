@@ -1,0 +1,21 @@
+"""A policy whose bodies look pure — the violations live in util.py."""
+from .util import commit_plan, pick_order, stamp_choice
+
+
+class EagerPolicy:
+    def decide(self, ctx):
+        plan = self._helper(ctx)
+        self._note(ctx)
+        return plan
+
+    def _helper(self, ctx):
+        # decide -> _helper -> commit_plan -> ctx.cluster.apply()
+        return commit_plan(ctx, [0, 1])
+
+    def _note(self, ctx):
+        # decide -> _note -> stamp_choice -> store through `ctx`
+        stamp_choice(ctx, 0)
+
+    def decide_batch(self, batch):
+        # decide_batch -> pick_order -> np.random.shuffle()
+        return pick_order(4)

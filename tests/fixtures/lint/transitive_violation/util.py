@@ -1,0 +1,21 @@
+"""Helpers that do the dirty work for the fixture policy."""
+import numpy as np
+
+
+def commit_plan(ctx, plan):
+    # cluster-mutation: the blessed path is cluster.apply OUTSIDE a policy
+    ctx.cluster.apply(plan)
+    return plan
+
+
+def stamp_choice(ctx, device):
+    # param-mutation: stores through the caller's frozen context
+    ctx.chosen = device
+    return device
+
+
+def pick_order(n):
+    # global-rng: hidden np.random module state
+    order = list(range(n))
+    np.random.shuffle(order)
+    return order

@@ -1,0 +1,23 @@
+"""Clean twin of unit_violation: every term converted before it meets
+another — the shape of the real Eq. (2) pricing path."""
+import numpy as np
+
+
+def price_well(exec_lat, model_bytes, upload_bw, out_bytes, link_bw):
+    upload = model_bytes / upload_bw          # B / (B/s) -> s
+    transfer = out_bytes / link_bw            # B / (B/s) -> s
+    total = exec_lat + upload + transfer      # s + s + s
+    return total
+
+
+def replicate_well(pf, beta, lams, dt, queue_len, n_feas):
+    combined = pf * pf                        # prob * prob -> prob
+    ok = combined >= beta                     # prob vs prob
+    surv = np.exp(-lams * dt)                 # (1/s) * s -> dimensionless
+    busy = queue_len > n_feas                 # count vs count
+    return ok, surv, busy
+
+
+def deadlines_well(t, deadline, est, wait):
+    slack = deadline - (t + est + wait)       # all seconds
+    return slack > 0.0

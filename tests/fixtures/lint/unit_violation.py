@@ -1,0 +1,21 @@
+"""Golden violating fixture for unit-consistency: the Eq. (2) bug class —
+bytes meeting seconds without the dividing bandwidth."""
+import numpy as np
+
+
+def price_badly(exec_lat, model_bytes, upload_bw, out_bytes, latency):
+    # seconds + bytes: the upload term forgot its `/ upload_bw`
+    total = exec_lat + model_bytes
+    # bytes vs seconds comparison
+    if out_bytes > latency:
+        total = total + out_bytes / upload_bw
+    # exp of a dimensioned quantity (should be exp(-lam * dt))
+    risk = np.exp(latency)
+    # where() merging seconds with bytes
+    slack = np.where(out_bytes > 0.0, latency, model_bytes)
+    return total, risk, slack
+
+
+def mixed_tags(pf, n_feas):
+    # probability compared against a cardinality
+    return pf >= n_feas

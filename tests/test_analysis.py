@@ -34,7 +34,13 @@ ALL_RULES = (
     "jit-hygiene",
     "deprecation",
     "registry-parity",
+    "kernel-hygiene",
+    "unit-consistency",
 )
+
+# the jaxpr auditor can only trace when jax is importable; everything else
+# in this suite is dependency-free
+NEEDS_JAX = ("kernel-hygiene",)
 
 
 def run_rule(rule, path, options=None, root=REPO):
@@ -69,6 +75,8 @@ FIXTURE_STEMS = {
     "jit-hygiene": "jit",
     "deprecation": "deprecation",
     "registry-parity": "registry",
+    "kernel-hygiene": "kernel",
+    "unit-consistency": "unit",
 }
 
 # every violation the fixture encodes must be reported (count pins the
@@ -80,11 +88,15 @@ MIN_VIOLATIONS = {
     "jit-hygiene": 4,         # if-on-tracer, .item(), float(), while/np.asarray
     "deprecation": 4,         # Device(bandwidth=), bandwidths(), 2 latency shims
     "registry-parity": 1,     # mystery_scheme unpinned
+    "kernel-hygiene": 4,      # f32 const + callback, 3-vs-1 lowerings, donation
+    "unit-consistency": 5,    # s+B, B-vs-s, exp(s), where(s,B), prob-vs-count
 }
 
 
 @pytest.mark.parametrize("rule", ALL_RULES)
 def test_rule_fires_on_violating_fixture(rule):
+    if rule in NEEDS_JAX:
+        pytest.importorskip("jax")
     path = FIXTURES / f"{FIXTURE_STEMS[rule]}_violation.py"
     report = run_rule(rule, path, FIXTURE_OPTIONS.get(rule))
     assert len(report.findings) >= MIN_VIOLATIONS[rule], report.findings
@@ -94,6 +106,8 @@ def test_rule_fires_on_violating_fixture(rule):
 
 @pytest.mark.parametrize("rule", ALL_RULES)
 def test_rule_silent_on_clean_fixture(rule):
+    if rule in NEEDS_JAX:
+        pytest.importorskip("jax")
     path = FIXTURES / f"{FIXTURE_STEMS[rule]}_clean.py"
     report = run_rule(rule, path, FIXTURE_OPTIONS.get(rule))
     assert report.findings == [], [f.format() for f in report.findings]
@@ -195,6 +209,7 @@ def test_json_report_shape():
     d = report_dict(report)
     assert d["version"] == 1
     assert d["errors"] == len(d["findings"]) > 0
+    assert d["elapsed_s"] >= 0  # the CI wall-clock budget record
     f = d["findings"][0]
     assert set(f) == {"rule", "severity", "path", "line", "col", "message"}
     json.dumps(d)  # must be serialisable
