@@ -260,8 +260,9 @@ def run(ctx) -> None:
         "churn_replan_per_sec",
         report["results"][GATED_SCHEME]["replan"]["replans_per_sec"],
     )
-    with open("BENCH_churn.json", "w") as f:
-        json.dump(report, f, indent=2)
+    from .common import write_current_run
+
+    write_current_run("churn", report)
 
 
 def main() -> None:

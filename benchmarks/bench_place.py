@@ -175,8 +175,9 @@ def run(ctx) -> None:
     for B, row in report["multi_tier"]["results"].items():
         ctx.emit(f"place_mt_batched_pps_B{B}", row["batched_pps"])
         ctx.emit(f"place_mt_speedup_B{B}", row["speedup"])
-    with open("BENCH_place.json", "w") as f:
-        json.dump(report, f, indent=2)
+    from .common import write_current_run
+
+    write_current_run("place", report)
 
 
 def main() -> None:

@@ -225,8 +225,9 @@ def run(ctx) -> None:
         ctx.emit(f"stream_{key}_p99_critical", row["p99_critical"])
         ctx.emit(f"stream_{key}_p99_best_effort", row["p99_best_effort"])
     ctx.emit("stream_gen_per_sec", report["generation"]["gen_per_sec"])
-    with open("BENCH_stream.json", "w") as f:
-        json.dump(report, f, indent=2)
+    from .common import write_current_run
+
+    write_current_run("stream", report)
 
 
 def main() -> None:

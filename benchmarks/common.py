@@ -81,13 +81,28 @@ class Ctx:
 
 
 # Benches whose full_report() is gated in CI against a committed baseline.
-GATED_BENCHES = ("place", "churn", "stream")
+GATED_BENCHES = ("place", "churn", "stream", "obs")
+
+
+def write_current_run(name: str, report: dict) -> str:
+    """Write a gated bench's current run to the repo-root
+    ``BENCH_<name>.json`` — the committed perf-trajectory artifact (one
+    snapshot per PR, next to the code it measured), distinct from the
+    regression baseline under ``benchmarks/``."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    return path
 
 
 def update_baselines(names: List[str]) -> None:
     """Regenerate ``benchmarks/BENCH_<name>.baseline.json`` for each gated
     bench by re-running its ``full_report()`` (the authoritative shape the
-    bench's ``check()`` consumes)."""
+    bench's ``check()`` consumes).  The same report is also written to the
+    repo-root ``BENCH_<name>.json`` trajectory artifact, so both committed
+    files always describe the same run."""
     import importlib
 
     here = os.path.dirname(__file__)
@@ -104,7 +119,9 @@ def update_baselines(names: List[str]) -> None:
         with open(path, "w") as f:
             json.dump(report, f, indent=2)
             f.write("\n")
-        print(f"# wrote {path} in {time.time()-t0:.1f}s", file=sys.stderr)
+        current = write_current_run(name, report)
+        print(f"# wrote {path} + {current} in {time.time()-t0:.1f}s",
+              file=sys.stderr)
 
 
 def main() -> None:

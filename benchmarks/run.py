@@ -21,6 +21,7 @@ from . import (
     bench_interference,
     bench_load,
     bench_microscopic,
+    bench_obs,
     bench_place,
     bench_profiles,
     bench_roofline,
@@ -46,6 +47,7 @@ BENCHES = {
     "roofline": bench_roofline,           # §Roofline (dry-run grid)
     "serving_shard": bench_serving_shard, # beyond-paper TP serving sharding
     "stream": bench_stream,               # beyond-paper always-on service
+    "obs": bench_obs,                     # observability overhead + validity
 }
 
 

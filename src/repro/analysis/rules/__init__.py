@@ -10,3 +10,4 @@ from . import deprecation    # noqa: F401
 from . import registry_parity  # noqa: F401
 from . import kernel_hygiene   # noqa: F401
 from . import unit_consistency  # noqa: F401
+from . import span_parity      # noqa: F401

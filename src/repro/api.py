@@ -137,6 +137,7 @@ class Orchestrator:
         max_retries: Optional[int] = None,
         salvage: int = 0,
         track_intervals: bool = False,
+        trace=None,
         **policy_kwargs,
     ):
         """``churn`` takes a :class:`repro.sim.churn.ChurnSchedule`: the
@@ -151,7 +152,17 @@ class Orchestrator:
         bit-identical to the pre-churn engine.  ``salvage`` bounds
         partial-result salvage resubmissions per instance: a lost instance
         with completed stages is re-planned through
-        ``orchestrate(pinned=...)`` instead of discarded (0 = off)."""
+        ``orchestrate(pinned=...)`` instead of discarded (0 = off).
+        ``trace`` takes a :class:`repro.obs.Tracer` (or ``True`` to
+        construct one): every instance then gets a structured span trace
+        for attribution and Chrome/Perfetto export (:mod:`repro.obs`);
+        None = tracing off, zero overhead."""
+        if trace is True:
+            from .obs import Tracer
+
+            trace = Tracer()
+        elif not trace:                    # False/None both mean "off"
+            trace = None
         if isinstance(policy, str):
             policy = make_policy(policy, seed=seed, **policy_kwargs)
         recovery_kw = {
@@ -172,7 +183,7 @@ class Orchestrator:
         self.engine = Engine(
             cluster, policy, seed=seed, noise_sigma=noise_sigma,
             churn=churn, recovery=recovery, salvage=salvage,
-            track_intervals=track_intervals,
+            track_intervals=track_intervals, trace=trace,
         )
 
     # -- online interface -------------------------------------------------------
@@ -258,8 +269,15 @@ class Orchestrator:
         return len(self.engine.events)
 
     @property
-    def stats(self) -> dict:
-        """Engine counters.  Instance ledger — ``admitted`` (instances whose
+    def trace(self):
+        """The engine's :class:`~repro.obs.Tracer` (None = tracing off)."""
+        return self.engine.trace
+
+    @property
+    def stats(self):
+        """Engine counters (a typed :class:`~repro.obs.EngineStats` over
+        the frozen counter vocabulary; misspelled names raise
+        AttributeError).  Instance ledger — ``admitted`` (instances whose
         ARRIVAL fired, plus stream-layer sheds), ``completed``, ``lost``
         (failed) and ``shed`` (dropped by admission control) satisfy
         ``admitted == completed + lost + shed``, asserted by :meth:`drain`.
@@ -309,6 +327,19 @@ _LAZY = {
     "diurnal_arrivals": ("repro.stream", "diurnal_arrivals"),
     "trace_replay": ("repro.stream", "trace_replay"),
     "MetricsRegistry": ("repro.stream", "MetricsRegistry"),
+    # observability (repro.obs): tracing, attribution, exporters
+    "Tracer": ("repro.obs", "Tracer"),
+    "Span": ("repro.obs", "Span"),
+    "SPAN_SCHEMA": ("repro.obs", "SPAN_SCHEMA"),
+    "EngineStats": ("repro.obs", "EngineStats"),
+    "ENGINE_COUNTERS": ("repro.obs", "ENGINE_COUNTERS"),
+    "attribution_report": ("repro.obs", "attribution_report"),
+    "instance_breakdown": ("repro.obs", "instance_breakdown"),
+    "format_report": ("repro.obs", "format_report"),
+    "to_chrome_trace": ("repro.obs", "to_chrome_trace"),
+    "ledger_from_trace": ("repro.obs", "ledger_from_trace"),
+    "validate_chrome_trace": ("repro.obs", "validate_chrome_trace"),
+    "json_summary": ("repro.obs", "json_summary"),
 }
 
 

@@ -165,8 +165,14 @@ class FailoverRecovery(_DelayedRecovery):
     def recover(self, engine, run, tname: str) -> None:
         if run.failed or run.done.get(tname, False):
             return
-        engine.stats["task_failovers"] += 1
+        engine.stats.task_failovers += 1
         rep = _best_surviving_replica(engine, run, tname)
+        if engine.trace is not None:
+            engine.trace.event(
+                run.rec.tid, "failover", engine.now, name=tname,
+                ok=rep is not None,
+                device=-1 if rep is None else rep.did,
+            )
         if rep is None:
             engine._finish_app(run, failed=True)
             return
@@ -205,7 +211,11 @@ class ReplanRecovery(_DelayedRecovery):
         t0 = time.perf_counter()
         plan = orchestrate(run.app, cluster, t, engine.policy, pinned=pinned)
         engine.replan_time += time.perf_counter() - t0
-        engine.stats["replans"] += 1
+        engine.stats.replans += 1
+        if engine.trace is not None:
+            engine.trace.event(
+                run.rec.tid, "replan", t, name=tname, ok=plan.feasible,
+            )
         if not plan.feasible:
             engine._finish_app(run, failed=True)
             return

@@ -57,6 +57,8 @@ from ..core.dag import AppDAG
 from ..core.orchestrator import Placement, Replica, orchestrate
 from ..core.policy import Policy, make_policy
 from ..core.recovery import RecoveryStrategy, make_recovery
+from ..obs.metrics import EngineStats
+from ..obs.tracing import FLEET_TID, Tracer
 
 __all__ = ["InstanceRecord", "SimResult", "Engine"]
 
@@ -72,6 +74,8 @@ class InstanceRecord:
     n_replicas: int = 0
     pred_latency: float = float("nan")
     pred_fail: float = float("nan")
+    # trace id in the engine's Tracer (-1 = tracing disabled)
+    tid: int = -1
 
 
 @dataclass
@@ -81,6 +85,10 @@ class SimResult:
     instances: List[InstanceRecord]
     load_per_device: np.ndarray          # tasks executed per device
     horizon: float
+    # attached extras: the StreamResult (scenario "stream") and the span
+    # trace (SimConfig(trace=True)); None when the feature is off.
+    stream: Optional[object] = None
+    trace: Optional[Tracer] = None
 
     # -- paper metrics (§V-E) ---------------------------------------------------
     @property
@@ -166,6 +174,7 @@ class Engine:
         recovery="fail_fast",
         salvage: int = 0,
         track_intervals: bool = False,
+        trace: Optional[Tracer] = None,
     ):
         """``scheduler`` may be a pure :class:`~repro.core.policy.Policy` or
         a registered policy name — every placement is routed through
@@ -183,7 +192,12 @@ class Engine:
         ``orchestrate(pinned=...)`` instead of discarded.
         ``track_intervals`` records every replica's
         actual execution span in :attr:`executed` so tests can prove the
-        occupancy bookkeeping nets to exactly the executed work."""
+        occupancy bookkeeping nets to exactly the executed work.
+        ``trace`` takes a :class:`repro.obs.tracing.Tracer`: every
+        instance then gets a structured span trace (admission -> plan ->
+        per-replica exec -> recovery -> terminal outcome), sim-clock
+        timestamped; None (the default) emits nothing and costs one
+        ``is not None`` check per event."""
         self.cluster = cluster
         if isinstance(scheduler, str):
             scheduler = make_policy(scheduler, seed=seed)
@@ -213,13 +227,13 @@ class Engine:
         #   admitted == completed + lost + shed
         # ("shed" is charged by the stream admission layer, which counts a
         # shed arrival as admitted-and-shed; pure engine runs keep it 0).
-        # ``drain`` asserts the identity.
-        self.stats: Dict[str, int] = {
-            "admitted": 0, "completed": 0, "shed": 0,
-            "device_down": 0, "device_up": 0, "replica_deaths": 0,
-            "task_failovers": 0, "replans": 0, "recovered": 0, "lost": 0,
-            "salvages": 0, "salvaged": 0,
-        }
+        # ``drain`` asserts the identity.  EngineStats is typed over the
+        # frozen ENGINE_COUNTERS vocabulary: a misspelled counter raises
+        # AttributeError instead of silently minting a new key.
+        self.stats = EngineStats()
+        self.trace = trace
+        # rid -> open "exec" span id, populated only when tracing
+        self._span_of: Dict[int, int] = {}
         self.churn = churn or None      # False (churn forced off) == None
         if self.churn is not None:
             churn.install(cluster)
@@ -305,6 +319,32 @@ class Engine:
         self._dev_active[rep.did].add(rid)
         run.live_rids.add(rid)
         ok = (self.now + dur) <= dev.alive_until
+        if self.trace is not None:
+            tid = run.rec.tid
+            # The open exec span mirrors the in-flight registry entry:
+            # [t0, sched_end] is the scheduled window, the close time is
+            # the actual cut (== sched_end unless churn kills it) — the
+            # same triple the `executed` interval log records, which the
+            # T_alloc replay property test holds the two paths to.
+            self._span_of[rid] = self.trace.open_span(
+                tid, "exec", self.now, name=tname,
+                device=rep.did, tier=int(dev.tier), ttype=spec.ttype,
+                stage=run.stage_idx, sched_end=self.now + dur,
+                pred_exec=rep.est_exec, pred_upload=rep.est_upload,
+                pred_transfer=rep.est_transfer, pred_fail=rep.pred_fail,
+                real_exec=exec_t,
+            )
+            if rep.est_upload > 0:
+                self.trace.add_span(
+                    tid, "model_upload", self.now,
+                    self.now + rep.est_upload, name=tname, device=rep.did,
+                )
+            if rep.est_transfer > 0:
+                t0u = self.now + rep.est_upload
+                self.trace.add_span(
+                    tid, "parent_transfer", t0u, t0u + rep.est_transfer,
+                    name=tname, device=rep.did,
+                )
         self._push(self.now + dur, self.TASK_END, (run, tname, rid, ok))
 
     def _retire_replica(self, rid: int, info: tuple) -> None:
@@ -321,12 +361,18 @@ class Engine:
         if self.track_intervals:
             _, _, did, ttype, t0, t1 = info
             self.executed.append((did, ttype, t0, t1, t1))
+        if self.trace is not None:
+            sid = self._span_of.pop(rid, None)
+            if sid is not None:
+                self.trace.close_span(
+                    sid, info[5], outcome="ok" if ok else "dead"
+                )
         if run.failed or run.done.get(tname, False):
             return
         run.inflight[tname] -= 1
         if not ok:
             run.touched = True
-            self.stats["replica_deaths"] += 1
+            self.stats.replica_deaths += 1
         if ok:
             run.done[tname] = True
             run.stage_pending -= 1
@@ -344,8 +390,10 @@ class Engine:
         in-flight replicas on the spot — their remaining occupancy is
         returned to T_alloc and each affected task is routed through the
         recovery strategy when it just lost its last replica."""
-        self.stats["device_down"] += 1
+        self.stats.device_down += 1
         self.cluster.mark_down(did, self.now)
+        if self.trace is not None:
+            self.trace.event(FLEET_TID, "device_down", self.now, device=did)
         # Each entry is stamped with its run's epoch AT THE POP: a salvage
         # fired by an earlier entry's recovery re-plans the run (bumping the
         # epoch) — the remaining pre-popped deaths then belong to a
@@ -363,11 +411,15 @@ class Engine:
             self.cluster.cancel_from(did, ttype, t0, t1, self.now)
             if self.track_intervals:
                 self.executed.append((did, ttype, t0, t1, self.now))
+            if self.trace is not None:
+                sid = self._span_of.pop(rid, None)
+                if sid is not None:
+                    self.trace.close_span(sid, self.now, outcome="killed")
             if (run.failed or run.done.get(tname, False)
                     or epoch != run.epoch):
                 continue
             run.touched = True
-            self.stats["replica_deaths"] += 1
+            self.stats.replica_deaths += 1
             run.inflight[tname] -= 1
             if run.inflight[tname] == 0:
                 self.recovery.on_task_dead(self, run, tname)
@@ -375,14 +427,22 @@ class Engine:
     def _device_up(self, did: int, until: float) -> None:
         """A device rejoins empty (fresh join time, cold caches) and is
         re-admitted as placement capacity until its next departure."""
-        self.stats["device_up"] += 1
+        self.stats.device_up += 1
         self.cluster.mark_up(did, self.now, alive_until=until)
+        if self.trace is not None:
+            self.trace.event(
+                FLEET_TID, "device_up", self.now, device=did, until=until
+            )
 
     def schedule_recovery(self, run: _AppRun, tname: str, t: float) -> None:
         """Recovery-strategy hook: fire ``recovery.recover(run, tname)`` at
         absolute time ``t`` (death + detection delay).  The event carries
         the run's current epoch: a salvage resubmission in between
         invalidates it (the doomed placement it targeted no longer exists)."""
+        if self.trace is not None:
+            self.trace.add_span(
+                run.rec.tid, "recovery_wait", self.now, t, name=tname
+            )
         self._push(t, self.RECOVER, (run, tname, run.epoch))
 
     def _finish_app(self, run: _AppRun, failed: bool) -> None:
@@ -399,13 +459,20 @@ class Engine:
         run.rec.finished = self.now
         run.rec.service_time = self.now - run.rec.arrival
         if failed:
-            self.stats["lost"] += 1
+            self.stats.lost += 1
         else:
-            self.stats["completed"] += 1
+            self.stats.completed += 1
             if run.touched:
-                self.stats["recovered"] += 1
+                self.stats.recovered += 1
                 if run.salvages:
-                    self.stats["salvaged"] += 1
+                    self.stats.salvaged += 1
+        if self.trace is not None and run.rec.tid >= 0:
+            self.trace.end_instance(
+                run.rec.tid, self.now,
+                outcome="lost" if failed else "completed",
+                recovered=bool(run.touched and not failed),
+                salvages=run.salvages,
+            )
 
     def _salvage(self, run: _AppRun) -> bool:
         """Partial-result salvage: instead of discarding a lost instance,
@@ -418,7 +485,7 @@ class Engine:
         cluster, t = self.cluster, self.now
         run.salvages += 1
         run.epoch += 1                  # invalidate pending RECOVER events
-        self.stats["salvages"] += 1
+        self.stats.salvages += 1
         # kill still-running sibling replicas and return the unstarted
         # remainder's provisional occupancy before re-planning, so the
         # salvage plan prices the fleet as it will actually be
@@ -434,6 +501,11 @@ class Engine:
         t0 = time.perf_counter()
         plan = orchestrate(run.app, cluster, t, self.policy, pinned=pinned)
         self.replan_time += time.perf_counter() - t0
+        if self.trace is not None:
+            self.trace.event(
+                run.rec.tid, "salvage", t,
+                ok=plan.feasible, pinned=len(pinned),
+            )
         if not plan.feasible:
             return False
         cluster.apply(plan)
@@ -461,6 +533,12 @@ class Engine:
             self.cluster.cancel_from(did, ttype, t0, t1, self.now)
             if self.track_intervals:
                 self.executed.append((did, ttype, t0, t1, self.now))
+            if self.trace is not None:
+                sid = self._span_of.pop(rid, None)
+                if sid is not None:
+                    self.trace.close_span(
+                        sid, self.now, outcome="cancelled"
+                    )
         run.live_rids.clear()
 
     def _cancel_provisional(
@@ -504,7 +582,18 @@ class Engine:
                     pred_fail=placement.pred_app_fail,
                 )
                 self.records.append(rec)
-                self.stats["admitted"] += 1
+                self.stats.admitted += 1
+                if self.trace is not None:
+                    rec.tid = self.trace.begin_instance(
+                        app.name, t,
+                        n_tasks=app.n_tasks, n_replicas=rec.n_replicas,
+                    )
+                    self.trace.event(
+                        rec.tid, "plan", t, policy=self.policy.name,
+                        pred_latency=placement.est_latency,
+                        pred_fail=placement.pred_app_fail,
+                        feasible=placement.feasible,
+                    )
                 if not placement.feasible:
                     # an infeasible arrival is an instance the fleet turned
                     # away: it is LOST the moment it arrives (previously it
@@ -512,7 +601,11 @@ class Engine:
                     rec.failed = True
                     rec.finished = t
                     rec.service_time = 0.0
-                    self.stats["lost"] += 1
+                    self.stats.lost += 1
+                    if self.trace is not None:
+                        self.trace.end_instance(
+                            rec.tid, t, outcome="lost", reason="infeasible"
+                        )
                     continue
                 run = _AppRun(rec=rec, app=app, placement=placement,
                               plan_now=plan.now)
@@ -544,21 +637,17 @@ class Engine:
         self.check_conservation()
 
     def check_conservation(self) -> None:
-        """``admitted == completed + lost + shed`` and no replica in
-        flight.  Raises RuntimeError on drift — the regression guard for
-        the counter bookkeeping."""
-        s = self.stats
-        settled = s["completed"] + s["lost"] + s["shed"]
-        if s["admitted"] != settled:
-            raise RuntimeError(
-                f"instance-counter drift: admitted {s['admitted']} != "
-                f"completed {s['completed']} + lost {s['lost']} + shed "
-                f"{s['shed']}"
-            )
+        """``admitted == completed + lost + shed`` (the identity itself
+        lives on :class:`~repro.obs.metrics.EngineStats`, checked in one
+        place) and no replica in flight.  Raises RuntimeError on drift —
+        the regression guard for the counter bookkeeping."""
+        self.stats.check_conservation()
         if self._active:
             raise RuntimeError(
                 f"{len(self._active)} replicas still in flight after drain"
             )
+        if self.trace is not None:
+            self.trace.check_closed()
 
     def finalize(self, until: Optional[float] = None) -> None:
         """Permanently close the books: anything still unfinished counts as
@@ -571,7 +660,11 @@ class Engine:
                 rec.failed = True
                 rec.finished = until
                 rec.service_time = until - rec.arrival
-                self.stats["lost"] += 1
+                self.stats.lost += 1
+                if self.trace is not None and rec.tid >= 0:
+                    self.trace.end_instance(
+                        rec.tid, until, outcome="lost", reason="horizon"
+                    )
 
     def result(self, scenario: str, horizon: float) -> SimResult:
         """Snapshot the metrics.  In-flight instances are *reported* as

@@ -99,6 +99,10 @@ class SimConfig:
     slo_critical: float = 6.0           # latency_critical E2E budget (s)
     slo_best_effort: float = 30.0       # best_effort E2E budget (s)
     stream_metrics_interval: float = 1.0
+    # -- observability (repro.obs) ---------------------------------------------
+    # True: attach a Tracer to the engine; the returned SimResult carries
+    # it as ``res.trace`` (spans for attribution / Chrome export).
+    trace: bool = False
 
     @property
     def churn_enabled(self) -> bool:
@@ -206,6 +210,7 @@ def _run_stream(cfg: SimConfig, scheme: str, profile: EdgeProfile) -> SimResult:
         seed=cfg.seed, noise_sigma=cfg.noise_sigma,
         churn=churn, recovery=cfg.recovery, salvage=cfg.salvage,
         detection_delay=cfg.detection_delay, max_retries=cfg.max_retries,
+        trace=cfg.trace,
     )
     streams = default_streams(
         slo_critical=cfg.slo_critical, slo_best_effort=cfg.slo_best_effort
@@ -234,6 +239,8 @@ def _run_stream(cfg: SimConfig, scheme: str, profile: EdgeProfile) -> SimResult:
     stream_res = service.run(arrivals)
     res = stream_res.result
     res.stream = stream_res            # SimResult is a plain dataclass
+    if cfg.trace:
+        res.trace = orch.trace
     return res
 
 
@@ -257,6 +264,7 @@ def run_one(
         seed=cfg.seed, noise_sigma=cfg.noise_sigma,
         churn=churn, recovery=cfg.recovery, salvage=cfg.salvage,
         detection_delay=cfg.detection_delay, max_retries=cfg.max_retries,
+        trace=cfg.trace,
     )
     apps, times = _make_workload(cfg)
     if cfg.fused_burst:
@@ -274,7 +282,10 @@ def run_one(
     else:
         orch.submit_batch(apps, times)
     orch.step(until=cfg.horizon + 25.0)
-    return orch.result(scenario=cfg.scenario, horizon=cfg.horizon)
+    res = orch.result(scenario=cfg.scenario, horizon=cfg.horizon)
+    if cfg.trace:
+        res.trace = orch.trace
+    return res
 
 
 def run_grid(

@@ -1,145 +1,13 @@
-"""Metrics export surface for the streaming service.
+"""Metrics primitives for the streaming service — re-export shim.
 
-A tiny dependency-free registry of counters / gauges / histograms, sampled
-on a configurable interval and exportable as JSON — the structured health
-surface an external controller would scrape.  The service records:
-
-  counters    admitted, shed (by reason), deadline_missed, failed,
-              completed, degraded — total and per SLO class
-  gauges      queue_depth, queue_fill, placements_per_sec
-  histograms  e2e latency per class (p50/p99/p999), queue depth samples,
-              per-wave planning wall time
-
-Histograms store raw observations (the service sees at most a few hundred
-thousand instances per run) so quantiles are exact rather than
-sketch-approximate; ``summary()`` reduces them to the export shape.
+The counters / gauges / exact-quantile histograms and the get-or-create
+registry moved to :mod:`repro.obs.metrics`, the unified metrics layer
+shared by the stream service and the engine's typed counter ledger
+(:class:`~repro.obs.metrics.EngineStats`).  This module keeps the
+original import path working; new code should import from ``repro.obs``.
 """
 from __future__ import annotations
 
-import json
-from typing import Dict, List, Optional
-
-import numpy as np
+from ..obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry"]
-
-
-class Counter:
-    """Monotone event count."""
-
-    __slots__ = ("name", "value")
-
-    def __init__(self, name: str):
-        self.name = name
-        self.value = 0
-
-    def inc(self, n: int = 1) -> None:
-        self.value += n
-
-
-class Gauge:
-    """Last-write-wins instantaneous value."""
-
-    __slots__ = ("name", "value")
-
-    def __init__(self, name: str):
-        self.name = name
-        self.value = 0.0
-
-    def set(self, v: float) -> None:
-        self.value = float(v)
-
-
-class Histogram:
-    """Exact-quantile histogram over raw observations."""
-
-    __slots__ = ("name", "values")
-
-    def __init__(self, name: str):
-        self.name = name
-        self.values: List[float] = []
-
-    def observe(self, v: float) -> None:
-        self.values.append(float(v))
-
-    @property
-    def count(self) -> int:
-        return len(self.values)
-
-    def quantile(self, q: float) -> float:
-        if not self.values:
-            return float("nan")
-        return float(np.quantile(np.asarray(self.values), q))
-
-    def summary(self) -> Dict[str, float]:
-        if not self.values:
-            return {"count": 0}
-        arr = np.asarray(self.values)
-        return {
-            "count": int(arr.size),
-            "mean": float(arr.mean()),
-            "p50": float(np.quantile(arr, 0.50)),
-            "p99": float(np.quantile(arr, 0.99)),
-            "p999": float(np.quantile(arr, 0.999)),
-            "max": float(arr.max()),
-        }
-
-
-class MetricsRegistry:
-    """Get-or-create registry + interval sampler.
-
-    ``sample(t)`` appends one row — every counter and gauge value at
-    instant ``t`` — to :attr:`samples`; the service calls it on its
-    configured interval so the export carries the time series, not just
-    the final totals."""
-
-    def __init__(self):
-        self.counters: Dict[str, Counter] = {}
-        self.gauges: Dict[str, Gauge] = {}
-        self.histograms: Dict[str, Histogram] = {}
-        self.samples: List[Dict[str, float]] = []
-
-    def counter(self, name: str) -> Counter:
-        c = self.counters.get(name)
-        if c is None:
-            c = self.counters[name] = Counter(name)
-        return c
-
-    def gauge(self, name: str) -> Gauge:
-        g = self.gauges.get(name)
-        if g is None:
-            g = self.gauges[name] = Gauge(name)
-        return g
-
-    def histogram(self, name: str) -> Histogram:
-        h = self.histograms.get(name)
-        if h is None:
-            h = self.histograms[name] = Histogram(name)
-        return h
-
-    def sample(self, t: float) -> Dict[str, float]:
-        row: Dict[str, float] = {"t": float(t)}
-        for name, c in self.counters.items():
-            row[name] = c.value
-        for name, g in self.gauges.items():
-            row[name] = g.value
-        self.samples.append(row)
-        return row
-
-    def snapshot(self) -> dict:
-        """The full export shape (JSON-serialisable)."""
-        return {
-            "counters": {k: c.value for k, c in sorted(self.counters.items())},
-            "gauges": {k: g.value for k, g in sorted(self.gauges.items())},
-            "histograms": {
-                k: h.summary() for k, h in sorted(self.histograms.items())
-            },
-            "samples": self.samples,
-        }
-
-    def to_json(self, path: Optional[str] = None, indent: int = 2) -> str:
-        text = json.dumps(self.snapshot(), indent=indent)
-        if path is not None:
-            with open(path, "w") as f:
-                f.write(text)
-        return text

@@ -128,15 +128,24 @@ class StreamingOrchestrator:
         eng = self.orch.engine
         new = self.controller.shed - self._shed_synced
         if new:
-            eng.stats["admitted"] += new
-            eng.stats["shed"] += new
+            eng.stats.admitted += new
+            eng.stats.shed += new
             self._shed_synced = self.controller.shed
         log = self.controller.shed_log
-        m = self.metrics
+        m, tr = self.metrics, eng.trace
         for rec in log[self._shed_logged:]:
             m.counter("shed").inc()
             m.counter(f"shed_{rec.slo}").inc()
             m.counter(f"shed_reason_{rec.reason}").inc()
+            if tr is not None:
+                # a shed instance never reaches the engine: its whole
+                # trace is one zero-length envelope with the drop instant,
+                # so the ledger still round-trips from spans alone
+                tid = tr.begin_instance(
+                    rec.kind, rec.t, uid=rec.uid, slo=rec.slo
+                )
+                tr.event(tid, "shed", rec.t, reason=rec.reason)
+                tr.end_instance(tid, rec.t, outcome="shed")
         self._shed_logged = len(log)
 
     def _dispatch(self, wave: List[Arrival], now: float) -> None:
@@ -179,7 +188,16 @@ class StreamingOrchestrator:
                 f"{len(self._meta)} dispatched arrivals"
             )
         m = self.metrics
-        for rec, (arrival, _disp_t, _degraded) in zip(records, self._meta):
+        tr = self.orch.engine.trace
+        for rec, (arrival, disp_t, degraded) in zip(records, self._meta):
+            if tr is not None and rec.tid >= 0:
+                # the queue wait the engine never saw: true arrival ->
+                # dispatch wave (the instance envelope starts at dispatch)
+                tr.add_span(
+                    rec.tid, "admission_queue", arrival.t, disp_t,
+                    slo=arrival.slo.name, degraded=degraded,
+                    deadline=arrival.deadline,
+                )
             if rec.failed:
                 m.counter("failed").inc()
                 m.counter(f"failed_{arrival.slo.name}").inc()
@@ -232,6 +250,9 @@ class StreamingOrchestrator:
         self.controller.assert_drained()
         self._finalize(rec0)
         m.gauge("queue_depth").set(0.0)
+        # one export surface: the engine's typed ledger is published into
+        # the same registry the service metrics live in
+        orch.engine.stats.to_registry(m)
         m.sample(orch.now)
         return StreamResult(
             result=orch.result(scenario="stream", horizon=orch.now),

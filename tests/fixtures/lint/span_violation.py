@@ -1,0 +1,14 @@
+"""Golden fixture: span-parity MUST flag every violation in here.
+
+Run with options ``{"src_paths": ("",), "test_paths": (),
+"schema": ("exec", "plan")}`` — four findings:
+two kinds missing from the schema, and two computed (non-literal) kinds.
+"""
+
+
+def emit(tracer, tid, now):
+    tracer.event(tid, "rogue_kind", now)                      # not in schema
+    tracer.add_span(tid, "other_rogue", now, now + 1.0)       # not in schema
+    kind = "exec"
+    tracer.open_span(tid, kind, now)                          # computed kind
+    tracer.event(tid, "pl" + "an", now)                       # computed kind

@@ -36,6 +36,7 @@ ALL_RULES = (
     "registry-parity",
     "kernel-hygiene",
     "unit-consistency",
+    "span-parity",
 )
 
 # the jaxpr auditor can only trace when jax is importable; everything else
@@ -66,6 +67,14 @@ FIXTURE_OPTIONS = {
         "policies": ("ibdash", "mystery_scheme"),
         "recoveries": ("fail_fast",),
     },
+    # hermetic schema; no test files scanned, so only the literal/schema
+    # halves of the contract are exercised (the test-pin half has its own
+    # two-file test below)
+    "span-parity": {
+        "src_paths": ("",),
+        "test_paths": (),
+        "schema": ("exec", "plan"),
+    },
 }
 
 FIXTURE_STEMS = {
@@ -77,6 +86,7 @@ FIXTURE_STEMS = {
     "registry-parity": "registry",
     "kernel-hygiene": "kernel",
     "unit-consistency": "unit",
+    "span-parity": "span",
 }
 
 # every violation the fixture encodes must be reported (count pins the
@@ -90,6 +100,7 @@ MIN_VIOLATIONS = {
     "registry-parity": 1,     # mystery_scheme unpinned
     "kernel-hygiene": 4,      # f32 const + callback, 3-vs-1 lowerings, donation
     "unit-consistency": 5,    # s+B, B-vs-s, exp(s), where(s,B), prob-vs-count
+    "span-parity": 4,         # 2 off-schema kinds, 2 computed kinds
 }
 
 
@@ -185,6 +196,37 @@ def test_parse_error_is_a_finding(tmp_path):
     report = run_rule("rng-discipline", f, root=tmp_path)
     assert [f.rule for f in report.findings] == ["parse-error"]
     assert report.exit_code == 1
+
+
+def test_span_parity_requires_test_pin(tmp_path):
+    """A kind emitted in src but never named in a scanned test file is an
+    unpinned span — and naming it silences the finding."""
+    (tmp_path / "src").mkdir()
+    (tmp_path / "tests").mkdir()
+    (tmp_path / "src" / "emit.py").write_text(
+        'def go(tr, tid, t):\n    tr.event(tid, "exec", t)\n'
+    )
+    (tmp_path / "tests" / "test_spans.py").write_text("x = 'unrelated'\n")
+    opts = {"schema": ("exec",)}
+    report = run_rule("span-parity", tmp_path, options=opts, root=tmp_path)
+    assert len(report.findings) == 1
+    assert "no behavioural pin" in report.findings[0].message
+    (tmp_path / "tests" / "test_spans.py").write_text("kinds = ('exec',)\n")
+    report = run_rule("span-parity", tmp_path, options=opts, root=tmp_path)
+    assert report.findings == []
+
+
+def test_span_parity_silent_without_emissions(tmp_path):
+    """Linting only tests (no emitting src files) must not guess."""
+    f = tmp_path / "mod.py"
+    f.write_text("x = 'exec'\n")
+    report = run_rule(
+        "span-parity", f,
+        options={"test_paths": ("",), "src_paths": ("src",),
+                 "schema": ("exec",)},
+        root=tmp_path,
+    )
+    assert report.findings == []
 
 
 def test_registry_parity_silent_without_test_files(tmp_path):

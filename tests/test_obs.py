@@ -1,0 +1,602 @@
+"""Observability layer (repro.obs): spans & traces, the typed engine
+ledger, predicted-vs-actual attribution, and the exporters.
+
+Pins the PR's contracts:
+
+  * the span vocabulary is FROZEN — the literal tuple below must equal
+    ``SPAN_SCHEMA`` exactly (this is also the span-parity lint rule's
+    behavioural pin: every kind emitted in src appears here as a string
+    literal);
+  * tracing is zero-cost when disabled and bit-identical: the same seeded
+    run with ``trace=`` on and off produces the same records and ledger;
+  * the exported Chrome trace round-trips the conservation identity
+    ``admitted == completed + lost + shed`` from the JSON alone, equal to
+    the live :class:`EngineStats`;
+  * exec spans are a lossless replay log: they reconstruct
+    ``Engine(track_intervals=True).executed`` tuple-for-tuple, and
+    replaying them onto a fresh cluster reproduces the occupancy tensor
+    (property-tested over random churn schedules);
+  * :class:`EngineStats` turns a misspelled counter into an immediate
+    ``AttributeError`` (satellite-1 regression) and checks conservation
+    in exactly one place.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.api import Orchestrator, make_policy, make_recovery
+from repro.core.cluster import ClusterState, Device
+from repro.core.dag import AppDAG, TaskSpec
+from repro.core.interference import InterferenceModel
+from repro.obs import (
+    ENGINE_COUNTERS,
+    EngineStats,
+    SPAN_SCHEMA,
+    Tracer,
+    attribution_report,
+    format_report,
+    instance_breakdown,
+    json_summary,
+    ledger_from_trace,
+    to_chrome_trace,
+    validate_chrome_trace,
+)
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.obs.tracing import FLEET_TID
+from repro.sim import SimConfig, make_cluster, make_profile, run_one
+from repro.sim.churn import ChurnSchedule, deterministic_churn
+from repro.sim.engine import Engine
+from repro.sim.runner import _make_workload, make_churn, policy_for
+
+GB = 1e9
+MB = 1e6
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return make_profile(seed=0)
+
+
+def small_cluster(n=4, lam=1e-6, base=None, horizon=100.0):
+    base = np.linspace(0.1, 0.4, n) if base is None else np.asarray(base)
+    model = InterferenceModel(
+        base=base[:, None], slope=np.full((n, 1, 1), 0.05)
+    )
+    devices = [
+        Device(did=i, cls=i, mem_total=8 * GB, lam=lam,
+               up_bw=100e6, down_bw=100e6)
+        for i in range(n)
+    ]
+    return ClusterState(devices=devices, model=model, horizon=horizon, dt=0.05)
+
+
+def chain_app(name="chain"):
+    return AppDAG.from_tasks(name, [
+        TaskSpec("a", ttype=0, out_bytes=1 * MB),
+        TaskSpec("b", ttype=0, deps=("a",)),
+    ])
+
+
+# ------------------------------------------------------- the span schema --
+# The frozen span vocabulary.  This literal tuple is load-bearing twice:
+# it pins the schema against accidental edits, AND it is the test-suite
+# string-literal pin the span-parity lint rule requires for every kind
+# emitted in src (add a kind here + SPAN_SCHEMA + obs/README.md together).
+SPAN_KINDS = (
+    "instance",
+    "admission_queue",
+    "plan",
+    "model_upload",
+    "parent_transfer",
+    "exec",
+    "recovery_wait",
+    "failover",
+    "replan",
+    "salvage",
+    "shed",
+    "device_down",
+    "device_up",
+)
+
+
+def test_span_schema_is_frozen():
+    assert tuple(SPAN_SCHEMA) == SPAN_KINDS
+    assert all(isinstance(doc, str) and doc for doc in SPAN_SCHEMA.values())
+
+
+# ------------------------------------------------------------ tracer unit --
+def test_tracer_basic_lifecycle():
+    tr = Tracer()
+    tid = tr.begin_instance("app#0", 1.0, n_tasks=2)
+    assert tid == 0 and tr.n_instances == 1
+    sid = tr.open_span(tid, "exec", 1.5, name="a", device=3)
+    tr.event(tid, "plan", 1.0, policy="ibdash")
+    tr.close_span(sid, 2.5, outcome="ok")
+    tr.end_instance(tid, 3.0, outcome="completed")
+    tr.check_closed()                       # nothing dangling
+    inst = tr.instance(tid)
+    assert inst.closed and inst.dur == pytest.approx(2.0)
+    assert inst.attrs["outcome"] == "completed"
+    # spans_of excludes the envelope; by_kind finds the exec window
+    assert [s.kind for s in tr.spans_of(tid)] == ["exec", "plan"]
+    (ex,) = tr.by_kind("exec")
+    assert (ex.t0, ex.t1, ex.attrs["outcome"]) == (1.5, 2.5, "ok")
+    assert tr.outcome_counts() == {"completed": 1}
+
+
+def test_tracer_rejects_unknown_kind_and_double_close():
+    tr = Tracer()
+    tid = tr.begin_instance("x", 0.0)
+    with pytest.raises(ValueError, match="unknown span kind"):
+        tr.event(tid, "not_a_kind", 0.0)
+    sid = tr.open_span(tid, "exec", 0.0)
+    tr.close_span(sid, 1.0)
+    with pytest.raises(RuntimeError, match="closed twice"):
+        tr.close_span(sid, 2.0)
+    tr.end_instance(tid, 1.0, outcome="completed")
+    with pytest.raises(RuntimeError, match="ended twice"):
+        tr.end_instance(tid, 2.0, outcome="lost")
+
+
+def test_check_closed_flags_dangling_spans():
+    tr = Tracer()
+    tid = tr.begin_instance("x", 0.0)
+    tr.open_span(tid, "exec", 0.5)
+    with pytest.raises(RuntimeError, match="still open"):
+        tr.check_closed()
+
+
+# -------------------------------------------- EngineStats (satellite-1) --
+def test_engine_stats_typo_raises():
+    """The regression this class exists for: a misspelled counter is an
+    immediate AttributeError, not a silently minted dict key."""
+    s = EngineStats()
+    with pytest.raises(AttributeError):
+        s.completd += 1                     # write typo
+    with pytest.raises(AttributeError):
+        _ = s.task_failover                 # read typo (singular)
+    with pytest.raises(AttributeError):
+        EngineStats(admited=3)              # constructor typo
+    with pytest.raises(AttributeError):
+        s["shedd"] = 1                      # mapping-style typo
+
+
+def test_engine_stats_mapping_compat():
+    s = EngineStats(admitted=3, completed=2, lost=1)
+    assert s["admitted"] == 3 and "lost" in s and "nope" not in s
+    assert len(s) == len(ENGINE_COUNTERS)
+    assert tuple(s.keys()) == ENGINE_COUNTERS
+    d = dict(s.items())
+    assert d["completed"] == 2 and sum(d.values()) == 6
+    assert s == d and s == EngineStats(**d)
+    assert dict(s) == {k: s[k] for k in s}  # keys()/__getitem__ protocol
+    assert "admitted=3" in repr(s)
+
+
+def test_engine_stats_conservation():
+    EngineStats(admitted=3, completed=1, lost=1, shed=1).check_conservation()
+    with pytest.raises(RuntimeError, match="instance-counter drift"):
+        EngineStats(admitted=3, completed=1).check_conservation()
+
+
+def test_engine_stats_to_registry():
+    s = EngineStats(admitted=5, completed=4, lost=1)
+    reg = MetricsRegistry()
+    s.to_registry(reg)
+    assert reg.counter("engine_admitted").value == 5
+    assert reg.counter("engine_lost").value == 1
+    snap = reg.snapshot()
+    assert set(snap["counters"]) == {"engine_" + k for k in ENGINE_COUNTERS}
+
+
+def test_stream_metrics_shim_reexports():
+    """repro.stream.metrics stays importable and IS the obs implementation."""
+    from repro.stream import metrics as sm
+
+    assert sm.MetricsRegistry is MetricsRegistry
+    assert sm.Histogram is Histogram
+
+
+# ---------------------------------------- histogram edges (satellite-3) --
+def test_histogram_empty():
+    h = Histogram("h")
+    assert h.count == 0
+    assert math.isnan(h.quantile(0.5))
+    assert h.summary() == {"count": 0}
+
+
+def test_histogram_single_sample():
+    h = Histogram("h")
+    h.observe(2.5)
+    s = h.summary()
+    assert s["count"] == 1
+    # every quantile of a single observation is that observation
+    assert s["p50"] == s["p99"] == s["p999"] == s["max"] == s["mean"] == 2.5
+
+
+def test_histogram_all_duplicates():
+    h = Histogram("h")
+    for _ in range(100):
+        h.observe(7.0)
+    assert h.quantile(0.01) == h.quantile(0.999) == 7.0
+    assert h.summary()["mean"] == 7.0
+
+
+def test_histogram_p999_under_1000_samples():
+    """With fewer than 1000 observations p999 interpolates toward the max
+    — it must stay finite and inside [p99, max], never index out of
+    range."""
+    h = Histogram("h")
+    for v in range(10):
+        h.observe(float(v))
+    s = h.summary()
+    assert math.isfinite(s["p999"])
+    assert s["p99"] <= s["p999"] <= s["max"] == 9.0
+
+
+# --------------------------------------------- tracing the churn runtime --
+def _traced_orchestrator(profile, scheme="ibdash"):
+    """The acceptance scenario: correlated churn hot enough to lose
+    instances + replan + salvage, intervals tracked, tracing on."""
+    cfg = SimConfig(scenario="correlated_churn", n_cycles=2,
+                    instances_per_cycle=60, seed=3, n_devices=12,
+                    recovery="replan", salvage=2, shock_rate=0.2,
+                    mean_downtime=30.0, gamma=1, max_retries=1)
+    mk = lambda: make_cluster(profile, scenario="correlated_churn",
+                              n_devices=12, seed=3,
+                              horizon=cfg.horizon + 60.0)
+    cluster = mk()
+    churn = make_churn(cfg, cluster)
+    orch = Orchestrator(cluster, policy_for(scheme, profile, cfg), seed=3,
+                        churn=churn, recovery=cfg.recovery,
+                        salvage=cfg.salvage,
+                        detection_delay=cfg.detection_delay,
+                        max_retries=cfg.max_retries,
+                        track_intervals=True, trace=True)
+    apps, times = _make_workload(cfg)
+    orch.submit_batch(apps, times)
+    orch.drain()
+    return orch, cluster, mk
+
+
+@pytest.fixture(scope="module")
+def traced(profile):
+    return _traced_orchestrator(profile)
+
+
+def test_traced_run_covers_the_pipeline(traced):
+    """The acceptance trace actually exercises the vocabulary: exec and
+    plan everywhere, churn kills, recovery and salvage activity."""
+    orch, _, _ = traced
+    tr = orch.trace
+    tr.check_closed()
+    assert tr.n_instances == orch.stats["admitted"]
+    kinds = {s.kind for s in tr.spans}
+    assert {"instance", "plan", "exec", "model_upload", "parent_transfer",
+            "device_down", "device_up", "recovery_wait", "replan",
+            "salvage"} <= kinds
+    # churn bites and the trace agrees with the counters about how hard
+    assert orch.stats["lost"] > 0 and orch.stats["replans"] > 0
+    assert orch.stats["salvages"] > 0
+    assert len(tr.by_kind("replan")) == orch.stats["replans"]
+    assert len(tr.by_kind("salvage")) == orch.stats["salvages"]
+    assert len(tr.by_kind("device_down")) == orch.stats["device_down"]
+    killed = [s for s in tr.by_kind("exec")
+              if s.attrs["outcome"] == "killed"]
+    assert killed and all(s.tid != FLEET_TID for s in killed)
+    # fleet events belong to no instance
+    assert all(s.tid == FLEET_TID for s in tr.by_kind("device_down"))
+
+
+def test_trace_ledger_matches_engine_stats(traced):
+    orch, _, _ = traced
+    counts = orch.trace.outcome_counts()
+    assert counts.get("completed", 0) == orch.stats["completed"]
+    assert counts.get("lost", 0) == orch.stats["lost"]
+    assert "open" not in counts
+
+
+def test_exec_spans_carry_predicted_next_to_realized(traced):
+    orch, _, _ = traced
+    for s in orch.trace.by_kind("exec"):
+        for key in ("pred_exec", "pred_upload", "pred_transfer",
+                    "pred_fail", "real_exec", "sched_end", "device",
+                    "tier", "ttype", "stage", "outcome"):
+            assert key in s.attrs, f"exec span missing {key}"
+        assert 0.0 <= s.attrs["pred_fail"] <= 1.0
+        if s.attrs["outcome"] == "ok":
+            # an ok replica ran exactly to its scheduled end
+            assert s.t1 == pytest.approx(s.attrs["sched_end"])
+
+
+def test_tracing_does_not_perturb_the_run(profile):
+    """Bit-identical results with the tracer on and off — the observer
+    effect the 'zero overhead when disabled' design rules out."""
+    cfg = SimConfig(scenario="churn", n_cycles=1, instances_per_cycle=40,
+                    seed=5, n_devices=16, recovery="failover")
+    base = run_one("ibdash", cfg, profile)
+    traced_res = run_one("ibdash", SimConfig(**{**cfg.__dict__, "trace": True}),
+                         profile)
+    assert traced_res.trace is not None
+    assert base.trace is None
+    assert [(r.app, r.finished, r.failed) for r in base.instances] == \
+           [(r.app, r.finished, r.failed) for r in traced_res.instances]
+
+
+def test_disabled_tracing_leaves_no_residue():
+    """trace=None (the default): no tracer object, records keep the
+    sentinel tid, and no span bookkeeping exists on the engine."""
+    cluster = small_cluster()
+    eng = Engine(cluster, make_policy("lavea"), noise_sigma=0.0)
+    eng.add_arrivals([chain_app()], [0.0])
+    eng.drain()
+    assert eng.trace is None
+    assert all(r.tid == -1 for r in eng.records)
+    assert eng._span_of == {}
+
+
+def test_infeasible_admission_is_traced_as_lost():
+    """An instance rejected at planning still opens and closes a trace —
+    the ledger must count it."""
+    tr = Tracer()
+    cluster = small_cluster(n=1)
+    churn = deterministic_churn([(0.1, 0, "leave")])
+    eng = Engine(cluster, make_policy("lavea"), noise_sigma=0.0,
+                 churn=churn, trace=tr)
+    eng.add_arrivals([chain_app()], [1.0])   # plans after the only device died
+    eng.drain()
+    assert eng.stats["lost"] == 1
+    (inst,) = list(tr.instances())
+    assert inst.attrs["outcome"] == "lost"
+    assert inst.attrs["reason"] == "infeasible"
+    assert tr.outcome_counts() == {"lost": 1}
+
+
+# ------------------------------------------------- exec spans == executed --
+def _executed_from_trace(tracer):
+    """Rebuild the engine's executed-interval log from exec spans alone."""
+    return sorted(
+        (int(s.attrs["device"]), int(s.attrs["ttype"]), s.t0,
+         float(s.attrs["sched_end"]), s.t1)
+        for s in tracer.by_kind("exec")
+    )
+
+
+def _rebuild_alloc(cluster_factory, executed):
+    c = cluster_factory()
+    for did, ttype, t0, t1, t_cut in executed:
+        c.add_interval(did, ttype, t0, t1)
+        if t_cut < t1:
+            c.cancel_from(did, ttype, t0, t1, t_cut)
+    return c.alloc
+
+
+def test_exec_spans_reconstruct_executed_log(traced):
+    """Satellite-6 (acceptance half): under correlated churn + salvage the
+    exec spans ARE the executed-interval log — tuple for tuple — and
+    replaying them onto a fresh cluster reproduces the occupancy tensor
+    that ``track_intervals=True`` accumulated."""
+    orch, cluster, mk = traced
+    eng = orch.engine
+    recon = _executed_from_trace(orch.trace)
+    assert recon == sorted(eng.executed)
+    assert np.array_equal(np.asarray(cluster.alloc),
+                          _rebuild_alloc(mk, recon))
+
+
+@settings(max_examples=15, deadline=None, derandomize=True)
+@given(
+    deaths=st.lists(
+        st.tuples(
+            st.floats(min_value=0.05, max_value=20.0),
+            st.integers(min_value=0, max_value=3),
+            st.one_of(st.none(), st.floats(min_value=0.3, max_value=4.0)),
+        ),
+        min_size=1, max_size=5,
+    ),
+    recovery=st.sampled_from(["fail_fast", "failover", "replan"]),
+)
+def test_exec_spans_replay_property(deaths, recovery):
+    """Satellite-6 (property half): for ANY churn schedule and recovery
+    mode, exec spans reproduce ``engine.executed`` exactly."""
+    events = []
+    for t, did, rejoin_after in deaths:
+        events.append((t, did, "leave"))
+        if rejoin_after is not None:
+            events.append((t + rejoin_after, did, "join"))
+    schedule = deterministic_churn(events)
+    apps = [chain_app(f"#{i}") for i in range(4)]
+    times = [5.0 * i for i in range(4)]
+    tr = Tracer()
+    mk = lambda: small_cluster(base=[0.3, 0.32, 0.34, 0.36], lam=1e-4)
+    cluster = mk()
+    eng = Engine(cluster, make_policy("lavea"), noise_sigma=0.0,
+                 churn=ChurnSchedule(schedule.events),
+                 recovery=make_recovery(recovery, detection_delay=0.1),
+                 track_intervals=True, trace=tr)
+    eng.add_arrivals(apps, times)
+    eng.drain()
+    tr.check_closed()
+    recon = _executed_from_trace(tr)
+    assert recon == sorted(eng.executed)
+    assert np.array_equal(np.asarray(cluster.alloc),
+                          _rebuild_alloc(mk, recon))
+
+
+# -------------------------------------------------------------- exporters --
+def test_chrome_trace_round_trips_the_ledger(traced, tmp_path):
+    """The acceptance check: the exported trace_event JSON is structurally
+    valid AND the conservation ledger recomputed from the file alone
+    equals the live engine counters."""
+    orch, _, _ = traced
+    path = tmp_path / "trace.json"
+    doc = to_chrome_trace(orch.trace, path=str(path))
+    n = validate_chrome_trace(doc)
+    assert n == len(doc["traceEvents"]) > 0
+    # byte round-trip through disk, strict JSON (no NaN/Infinity tokens)
+    text = path.read_text()
+    assert "NaN" not in text and "Infinity" not in text
+    led = ledger_from_trace(json.loads(text))
+    assert led["admitted"] == orch.stats["admitted"]
+    assert led["completed"] == orch.stats["completed"]
+    assert led["lost"] == orch.stats["lost"]
+    assert led["shed"] == orch.stats["shed"]
+    assert led["admitted"] == led["completed"] + led["lost"] + led["shed"]
+
+
+def test_chrome_trace_structure(traced):
+    orch, _, _ = traced
+    ev = to_chrome_trace(orch.trace)["traceEvents"]
+    pids = {e["pid"] for e in ev}
+    assert pids == {0, 1}                    # instances + devices
+    process_names = {e["args"]["name"] for e in ev
+                     if e["ph"] == "M" and e["name"] == "process_name"}
+    assert process_names == {"instances", "devices"}
+    # every exec window sits on its device's row with a flow stitch back
+    execs = [e for e in ev if e.get("cat") == "exec" and e["ph"] == "X"]
+    assert execs and all(e["pid"] == 1 for e in execs)
+    flows = {(e["ph"], e["pid"]) for e in ev if e.get("cat") == "flow"}
+    assert ("s", 0) in flows and ("t", 1) in flows
+    # churn instants land on device rows
+    churn_ev = [e for e in ev if e.get("cat") == "churn"]
+    assert churn_ev and all(e["pid"] == 1 and e["ph"] == "i"
+                            for e in churn_ev)
+
+
+def test_export_refuses_open_spans():
+    tr = Tracer()
+    tid = tr.begin_instance("x", 0.0)
+    tr.open_span(tid, "exec", 0.5)
+    with pytest.raises(ValueError, match="drain the engine"):
+        to_chrome_trace(tr)
+
+
+def test_ledger_from_trace_rejects_missing_outcome():
+    doc = {"traceEvents": [{"name": "i0", "cat": "instance", "ph": "X",
+                            "pid": 0, "tid": 0, "ts": 0, "dur": 1,
+                            "args": {}}]}
+    with pytest.raises(ValueError, match="no terminal outcome"):
+        ledger_from_trace(doc)
+
+
+def test_json_summary(traced, tmp_path):
+    orch, _, _ = traced
+    reg = MetricsRegistry()
+    orch.stats.to_registry(reg)
+    path = tmp_path / "summary.json"
+    out = json_summary(orch.trace, registry=reg, path=str(path))
+    assert out["n_instances"] == orch.stats["admitted"]
+    assert out["spans_by_kind"]["exec"] == len(orch.trace.by_kind("exec"))
+    on_disk = json.loads(path.read_text())
+    assert on_disk["ledger"] == out["ledger"]
+    assert on_disk["metrics"]["counters"]["engine_lost"] == orch.stats["lost"]
+
+
+# ------------------------------------------------------------ attribution --
+def _hand_trace():
+    """A trace with known arithmetic: 1 s queue, two overlapping execs
+    (union 3 s), a recovery wait, 1 s unexplained stall."""
+    tr = Tracer()
+    tid = tr.begin_instance("app", 1.0)
+    tr.add_span(tid, "admission_queue", 0.0, 1.0, slo="best_effort")
+    tr.event(tid, "plan", 1.0, policy="p", pred_latency=4.0, pred_fail=0.1)
+    tr.add_span(tid, "exec", 1.0, 3.0, name="a", device=0, tier=0, stage=0,
+                pred_exec=1.8, pred_upload=0.0, pred_transfer=0.0,
+                pred_fail=0.05, sched_end=3.0, outcome="ok")
+    tr.add_span(tid, "exec", 2.0, 4.0, name="a", device=1, tier=1, stage=0,
+                pred_exec=2.1, pred_upload=0.0, pred_transfer=0.0,
+                pred_fail=0.20, sched_end=4.0, outcome="dead")
+    tr.add_span(tid, "recovery_wait", 4.0, 4.5, name="a")
+    tr.add_span(tid, "exec", 4.5, 5.0, name="b", device=0, tier=0, stage=1,
+                pred_exec=0.6, pred_upload=0.0, pred_transfer=0.0,
+                pred_fail=0.05, sched_end=5.0, outcome="ok")
+    tr.end_instance(tid, 6.0, outcome="completed")
+    return tr, tid
+
+
+def test_instance_breakdown_arithmetic():
+    tr, tid = _hand_trace()
+    b = instance_breakdown(tr, tid)
+    assert b["arrival"] == 0.0                # true arrival = queue start
+    assert b["e2e"] == pytest.approx(6.0)
+    assert b["queue_wait"] == pytest.approx(1.0)
+    assert b["exec_busy"] == pytest.approx(3.5)   # [1,4] u [4.5,5]
+    assert b["recovery_wait"] == pytest.approx(0.5)
+    assert b["stall"] == pytest.approx(1.0)       # 6 - 1 - 3.5 - 0.5
+    assert set(b["stages"]) == {0, 1}
+    s0 = b["stages"][0]
+    assert s0["n_replicas"] == 2 and s0["critical_device"] == 1
+    assert s0["wall"] == pytest.approx(3.0)
+
+
+def test_calibration_rows():
+    from repro.obs.attribution import calibration
+
+    tr, _ = _hand_trace()
+    cal = calibration(tr)
+    pol = cal["policy"]["p"]
+    assert pol["latency"]["n"] == 1
+    # e2e from engine arrival (1.0) to end (6.0) = 5.0 vs predicted 4.0
+    assert pol["latency"]["real_mean"] == pytest.approx(5.0)
+    assert pol["latency"]["bias"] == pytest.approx(1.0)
+    assert pol["p_fail"]["empirical"] == 0.0
+    # device 1's only replica died -> empirical death rate 1.0
+    assert cal["device"]["1"]["p_fail"]["empirical"] == pytest.approx(1.0)
+    assert cal["device"]["0"]["p_fail"]["empirical"] == pytest.approx(0.0)
+    # duration rows compare pred sum vs realized window
+    assert cal["tier"]["0"]["duration"]["n"] == 2
+    assert cal["tier"]["0"]["duration"]["pred_mean"] == pytest.approx(1.2)
+    assert cal["tier"]["0"]["duration"]["real_mean"] == pytest.approx(1.25)
+
+
+def test_attribution_report_on_traced_run(traced):
+    orch, _, _ = traced
+    rep = attribution_report(orch.trace, top_k=3)
+    assert rep["ledger"].get("completed", 0) == orch.stats["completed"]
+    cp = rep["critical_path"]
+    assert cp["n"] == orch.stats["completed"]
+    for f in ("e2e", "queue_wait", "exec_busy", "upload_total",
+              "transfer_total", "recovery_wait", "stall"):
+        assert math.isfinite(cp[f + "_mean"]) and cp[f + "_mean"] >= 0.0
+    # the per-stage decomposition never exceeds e2e on any slow offender
+    for b in rep["slow"]:
+        assert b["queue_wait"] + b["exec_busy"] + b["recovery_wait"] + \
+               b["stall"] <= b["e2e"] + 1e-9
+    # lost report names the devices whose deaths sank the instance
+    assert rep["lost"] and all(b["replica_deaths"] >= 0 for b in rep["lost"])
+    assert "ibdash" in rep["calibration"]["policy"]
+    text = format_report(rep)
+    assert "instance ledger" in text and "calibration: policy" in text
+    assert "ibdash" in text
+
+
+# ------------------------------------------------------- stream tracing --
+def test_stream_run_traces_admission(profile):
+    """The stream scenario end-to-end with tracing: admission-queue spans
+    on dispatched instances, shed instances traced and counted, and the
+    exported ledger equal to the engine's, shed included."""
+    cfg = SimConfig(scenario="stream", n_cycles=1, cycle_len=6.0,
+                    seed=2, n_devices=8, stream_rate=80.0,
+                    stream_queue_cap=24, trace=True)
+    res = run_one("ibdash", cfg, profile)
+    tr = res.trace
+    assert tr is not None
+    counts = tr.outcome_counts()
+    shed = counts.get("shed", 0)
+    assert shed > 0, "queue cap chosen to force shedding"
+    assert shed == sum(1 for s in tr.by_kind("shed"))
+    queue_spans = tr.by_kind("admission_queue")
+    assert queue_spans, "dispatched instances carry queue spans"
+    assert all(s.dur >= 0.0 for s in queue_spans)
+    doc = to_chrome_trace(tr)
+    validate_chrome_trace(doc)
+    led = ledger_from_trace(doc)
+    assert led["shed"] == shed
+    assert led["admitted"] == led["completed"] + led["lost"] + led["shed"]
+    # the unified registry carries the engine ledger next to service series
+    snap = res.stream.metrics
+    assert snap["counters"]["engine_admitted"] == led["admitted"]
+    assert snap["counters"]["engine_shed"] == led["shed"]
