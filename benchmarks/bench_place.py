@@ -13,12 +13,17 @@ Plans B application instances arriving simultaneously on the paper's
 Both paths are pure planning against the same snapshot and are bit-identical
 (asserted here on every run).  A second section runs the asymmetric 3-tier
 ``multi_tier`` fleet with the ``tier_escalation`` policy, so the report also
-records placement throughput under the tier-aware (D, D) link-matrix cost
-model.  Writes ``BENCH_place.json`` with placements/sec at
-B ∈ {1, 64, 1000}; ``--check BASELINE.json`` exits non-zero on a >2x
-regression of the batched-vs-scalar speedup ratio against the committed
-baseline (used by CI; the ratio is gated rather than absolute throughput so
-the check is portable across runner hardware).
+records placement throughput under the tier-aware bottleneck-link cost
+model.  A third section sweeps FLEET SIZE (1k / 10k / 100k devices) over
+the factorized snapshot path with the dense ``(D, D)`` accessor tripwired —
+reintroducing the dense matrix anywhere in wave planning fails the bench
+outright rather than just slowing it.  Writes ``BENCH_place.json`` with
+placements/sec at B ∈ {1, 64, 1000} plus the fleet-sweep columns;
+``--check BASELINE.json`` exits non-zero on a >2x regression of the
+batched-vs-scalar speedup ratio, a missing/failed fleet-sweep point, or a
+>3x regression of the sweep's 1k/100k throughput-scaling ratio against the
+committed baseline (used by CI; ratios are gated rather than absolute
+throughput so the check is portable across runner hardware).
 
     PYTHONPATH=src python -m benchmarks.bench_place \
         [--out BENCH_place.json] [--check benchmarks/BENCH_place.baseline.json]
@@ -37,6 +42,10 @@ import numpy as np
 
 BATCH_SIZES = (1, 64, 1000)
 REGRESSION_FACTOR = 2.0
+FLEET_SIZES = (1_000, 10_000, 100_000)
+# the fleet sweep gates the SHAPE of the scaling curve (pps@1k / pps@100k),
+# which is hardware-portable but noisier than the single-fleet speedup ratio
+SWEEP_REGRESSION_FACTOR = 3.0
 
 
 def _workload(B: int, seed: int = 1):
@@ -116,13 +125,63 @@ def measure(
     }
 
 
+def _forbid_dense(*_a, **_k):
+    raise AssertionError(
+        "dense (D, D) link matrix materialized during the fleet sweep — "
+        "the factorized snapshot path must never build it"
+    )
+
+
+def fleet_sweep(
+    scheme: str = "ibdash",
+    B: int = 16,
+    sizes=FLEET_SIZES,
+    seed: int = 0,
+) -> dict:
+    """Batched placement throughput vs fleet size on the factorized
+    snapshot path (multi-tier fleets, so the backhaul factor is live).
+
+    Every cluster's dense ``link_bw`` accessor is replaced with a tripwire:
+    the sweep COMPLETING is the proof that no ``(D, D)`` array was
+    materialized anywhere in wave planning, at 100k devices included.
+    T_alloc uses coarse buckets (dt=0.5, horizon=20) so the occupancy
+    tensor — the one intentionally O(D x N x buckets) structure — stays a
+    few hundred MB at 100k devices."""
+    from repro.api import orchestrate_batch
+    from repro.sim import SimConfig, make_cluster, make_profile
+    from repro.sim.runner import policy_for
+
+    profile = make_profile(seed=seed)
+    cfg = SimConfig(seed=seed)
+    apps = _workload(B)
+    results = {}
+    for D in sizes:
+        cluster = make_cluster(
+            profile, scenario="multi_tier", n_devices=D, seed=seed,
+            horizon=20.0, dt=0.5,
+        )
+        cluster.link_bw = _forbid_dense
+        pol = policy_for(scheme, profile, cfg)
+        orchestrate_batch(apps, cluster, pol)     # warm the jitted kernels
+        reps = 5 if D <= 10_000 else 2
+        pol = policy_for(scheme, profile, cfg)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            orchestrate_batch(apps, cluster, pol)
+        wave_s = (time.perf_counter() - t0) / reps
+        results[str(D)] = {"pps": B / wave_s, "wave_s": wave_s}
+    return {"scheme": scheme, "B": B, "results": results}
+
+
 def full_report() -> dict:
     """The paper's mix fleet with IBDASH, plus the multi-tier fleet (the
-    tier-aware (D, D) link-matrix cost path) with tier_escalation."""
+    tier-aware bottleneck-link cost path) with tier_escalation, plus the
+    factorized fleet-size sweep (1k / 10k / 100k devices)."""
     report = measure()
     report["multi_tier"] = measure(
         scheme="tier_escalation", scenario="multi_tier", latency_budget=4.0
     )
+    report["fleet_sweep"] = fleet_sweep()
     return report
 
 
@@ -143,13 +202,40 @@ def _check_section(results: dict, base_results: dict, label: str) -> list:
     return failures
 
 
-def check(report: dict, baseline_path: str) -> int:
-    """Fail on a >2x regression of the batched-vs-scalar SPEEDUP ratio, for
-    the mix fleet and (when the baseline records it) the multi-tier fleet.
+def _check_sweep(report: dict, baseline: dict) -> list:
+    """Gate the fleet-size sweep: every baseline fleet size must be present
+    (the sweep itself raises if a dense (D, D) matrix is materialized, so a
+    point existing means the factorized path carried it), and the
+    throughput-scaling ratio pps@smallest / pps@largest must not blow up
+    more than SWEEP_REGRESSION_FACTOR vs the committed baseline."""
+    failures = []
+    base_fs = baseline["fleet_sweep"]["results"]
+    got_fs = report.get("fleet_sweep", {}).get("results", {})
+    for D in base_fs:
+        if D not in got_fs or got_fs[D]["pps"] <= 0:
+            failures.append(f"fleet_sweep D={D}: missing from report")
+    if failures:
+        return failures
+    lo, hi = min(base_fs, key=int), max(base_fs, key=int)
+    base_ratio = base_fs[lo]["pps"] / base_fs[hi]["pps"]
+    got_ratio = got_fs[lo]["pps"] / got_fs[hi]["pps"]
+    if got_ratio > base_ratio * SWEEP_REGRESSION_FACTOR:
+        failures.append(
+            f"fleet_sweep: pps@{lo}/pps@{hi} scaling ratio {got_ratio:.1f} "
+            f"> {base_ratio:.1f} (baseline) x {SWEEP_REGRESSION_FACTOR} — "
+            "placement cost is growing with raw fleet size again"
+        )
+    return failures
 
-    The gate compares the ratio, not absolute placements/sec: both paths
-    run on the same machine in the same job, so the ratio is portable
-    across runner hardware while absolute throughput is not.
+
+def check(report: dict, baseline_path: str) -> int:
+    """Fail on a >2x regression of the batched-vs-scalar SPEEDUP ratio (mix
+    fleet and, when the baseline records it, the multi-tier fleet) or a
+    fleet-sweep failure (see :func:`_check_sweep`).
+
+    The gates compare ratios, not absolute placements/sec: everything runs
+    on the same machine in the same job, so ratios are portable across
+    runner hardware while absolute throughput is not.
     """
     with open(baseline_path) as f:
         baseline = json.load(f)
@@ -160,6 +246,8 @@ def check(report: dict, baseline_path: str) -> int:
             baseline["multi_tier"]["results"],
             "multi_tier",
         )
+    if "fleet_sweep" in baseline:
+        failures += _check_sweep(report, baseline)
     for msg in failures:
         print(f"REGRESSION {msg}", file=sys.stderr)
     return 1 if failures else 0
@@ -175,6 +263,8 @@ def run(ctx) -> None:
     for B, row in report["multi_tier"]["results"].items():
         ctx.emit(f"place_mt_batched_pps_B{B}", row["batched_pps"])
         ctx.emit(f"place_mt_speedup_B{B}", row["speedup"])
+    for D, row in report["fleet_sweep"]["results"].items():
+        ctx.emit(f"place_fleet_pps_D{D}", row["pps"])
     from .common import write_current_run
 
     write_current_run("place", report)
@@ -196,6 +286,10 @@ def main() -> None:
                   f"scalar {row['scalar_pps']:10.1f} pl/s  "
                   f"batched {row['batched_pps']:10.1f} pl/s  "
                   f"speedup {row['speedup']:6.2f}x")
+    for D, row in report["fleet_sweep"]["results"].items():
+        print(f"{'fleet_sweep/ibdash':26s} D={D:>6s}  "
+              f"batched {row['pps']:10.1f} pl/s  "
+              f"wave {row['wave_s'] * 1e3:8.1f} ms")
     if args.check:
         sys.exit(check(report, args.check))
 

@@ -26,13 +26,13 @@ from ..framework import FileContext, Finding, ProjectContext, Rule, register_rul
 _LEGACY_CALLS = {
     "transfer_latency":
         "the scalar-bandwidth `transfer_latency` shim predates the link "
-        "matrix; price transfers with `cluster.link_bw()[src, dst]`",
+        "model; price transfers with `cluster.link_row(src)[dst]`",
     "upload_latency":
         "the scalar-bandwidth `upload_latency` shim predates the link "
-        "matrix; price uploads with `cluster.upload_bw()[dst]`",
+        "model; price uploads with `cluster.upload_bw()[dst]`",
     "bandwidths":
         "`bandwidths()` is the deprecated receiver-only (D,) vector; use "
-        "`link_bw()` / `up_bandwidths()` / `down_bandwidths()` (PR 3)",
+        "`link_row()` / `up_bandwidths()` / `down_bandwidths()` (PR 3)",
 }
 
 

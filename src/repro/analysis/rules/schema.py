@@ -3,8 +3,8 @@ declared leaf schema.
 
 The invariant: ``FleetSnapshot`` is a registered JAX pytree whose leaf
 order IS its dataclass field order (``flatten_fleet`` iterates
-``fields()``).  The schema has already drifted 12 -> 13 -> 15 leaves
-across PRs 3-5; a construction site that goes positional, or misses a new
+``fields()``).  The schema has already drifted 12 -> 13 -> 15 -> 17 leaves
+across PRs 3-10; a construction site that goes positional, or misses a new
 leaf, reorders/omits pytree leaves *silently* — jitted kernels then read
 the wrong tensor with no shape error in sight.  The single source of
 truth is :data:`repro.core.batched.FLEET_SNAPSHOT_SCHEMA`; this rule

@@ -171,6 +171,7 @@ DEFAULT_TABLE: Dict[str, str] = {
     "down_bw": "B/s",
     "upload_bw": "B/s",
     "backhaul_bw": "B/s",
+    "backhaul": "B/s",
     # probabilities
     "pf": "prob",
     "survival": "prob",

@@ -46,6 +46,7 @@ __all__ = [
     "BatchedDecision",
     "HAVE_JAX",
     "BATCH_KERNEL_MIN_ROWS",
+    "TOPK_PRUNE_MIN_DEVICES",
     "ibdash_decide_batch",
     "lavea_decide_batch",
     "round_robin_decide_batch",
@@ -57,20 +58,35 @@ __all__ = [
 # per-row scalar rule.
 BATCH_KERNEL_MIN_ROWS = 8
 
+# Above this many devices the IBDASH candidate queue is pre-pruned with a
+# partial selection (O(D) per row) instead of a full O(D log D) stable
+# argsort — only the first n_scan + 1 queue entries are ever reachable, so
+# decide_batch cost scales with candidates considered, not raw fleet size.
+TOPK_PRUNE_MIN_DEVICES = 256
+
 # THE declarative FleetSnapshot leaf schema — the single source of truth the
 # dataclass declaration, the pytree flattener (which iterates ``fields()``,
 # so field order IS leaf order), every construction site, and the
 # ``snapshot-schema`` lint rule are all checked against.  The schema has
-# drifted 12 -> 13 -> 15 leaves across PRs 3-5; to add a leaf, extend this
-# tuple AND the dataclass together, then let ``python -m repro.analysis``
+# drifted 12 -> 13 -> 15 -> 17 leaves across PRs 3-10; to add a leaf, extend
+# this tuple AND the dataclass together, then let ``python -m repro.analysis``
 # point at every construction site that needs the new keyword.
+#
+# PR 10 factorized the dense ``link_bw`` leaf out of the snapshot: the
+# bottleneck rule bw_eff[s, d] = min(up[s], down[d], backhaul[tier[s],
+# tier[d]]) is carried as its O(D) + O(T^2) factors (``up_bw``, ``down_bw``,
+# ``backhaul`` + the existing ``tiers``), so a snapshot never holds O(D^2)
+# state and 100k-device fleets fit.  Sender rows are derived lazily
+# (:meth:`FleetSnapshot.link_row`).
 FLEET_SNAPSHOT_SCHEMA: Tuple[str, ...] = (
     "t",
     "classes",
     "lams",
     "bandwidths",
     "tiers",
-    "link_bw",
+    "up_bw",
+    "down_bw",
+    "backhaul",
     "mem_total",
     "join_times",
     "alive",
@@ -99,9 +115,14 @@ class FleetSnapshot:
     t: float                 # absolute time of the snapshot
     classes: np.ndarray      # (D,) device-class ids
     lams: np.ndarray         # (D,) failure rates (Table IV)
-    bandwidths: np.ndarray   # (D,) DEPRECATED scalar bandwidths (see link_bw)
+    bandwidths: np.ndarray   # (D,) DEPRECATED scalar bandwidths (see link_row)
     tiers: np.ndarray        # (D,) fleet tier ids (device/edge_server/cloud)
-    link_bw: np.ndarray      # (D, D) bw_eff[s, d] = min(up[s], down[d], backhaul)
+    # Factorized bottleneck link model (PR 10): bw_eff[s, d] = min(up_bw[s],
+    # down_bw[d], backhaul[tiers[s], tiers[d]]), +inf on the diagonal.  The
+    # dense (D, D) matrix is never a leaf — derive rows with ``link_row``.
+    up_bw: np.ndarray        # (D,) sender uplink rates in bytes/s
+    down_bw: np.ndarray      # (D,) receiver downlink rates in bytes/s
+    backhaul: np.ndarray     # (T, T) inter-tier backhaul rates (inf = free)
     mem_total: np.ndarray    # (D,) H(ED) in bytes (memory-feasibility data)
     join_times: np.ndarray   # (D,) device join times
     alive: np.ndarray        # (D,) bool: not yet departed at t (churn mask)
@@ -123,6 +144,31 @@ class FleetSnapshot:
     @property
     def n_types(self) -> int:
         return int(self.counts.shape[1])
+
+    def link_row(self, s: int) -> np.ndarray:
+        """(D,) sender row ``bw_eff[s, :]`` of the effective link matrix,
+        derived from the O(D) factors: ``min(up_bw[s], down_bw[d],
+        backhaul[tiers[s], tiers[d]])`` with ``+inf`` at ``d == s`` (a
+        co-located transfer crosses no network hop).  Bit-identical to
+        slicing the dense matrix the pre-factorization snapshots carried."""
+        s = int(s)
+        row = np.minimum(self.up_bw[s], self.down_bw)
+        row = np.minimum(row, self.backhaul[self.tiers[s], self.tiers])
+        row[s] = np.inf
+        return row
+
+    @cached_property
+    def link_bw(self) -> np.ndarray:
+        """(D, D) dense ``bw_eff`` matrix, materialized ON DEMAND from the
+        factor leaves (and cached on the instance).  Debug / small-fleet
+        convenience only: it is O(D^2) memory, is NOT a pytree leaf, and hot
+        paths must slice :meth:`link_row` instead."""
+        link = np.minimum(self.up_bw[:, None], self.down_bw[None, :])
+        link = np.minimum(
+            link, self.backhaul[self.tiers[:, None], self.tiers[None, :]]
+        )
+        np.fill_diagonal(link, np.inf)
+        return link
 
     def validate(self) -> "FleetSnapshot":
         """Runtime twin of the ``snapshot-schema`` lint rule: assert this
@@ -281,8 +327,14 @@ class BatchedPolicyContext:
     def tiers(self) -> np.ndarray:
         return self.fleet.tiers
 
+    def link_row(self, s: int) -> np.ndarray:
+        """(D,) sender row of the effective link matrix (factorized)."""
+        return self.fleet.link_row(s)
+
     @property
     def link_bw(self) -> np.ndarray:
+        """(D, D) dense bw_eff matrix, materialized on demand from the
+        snapshot's factor leaves — debug/small-fleet only (O(D^2))."""
         return self.fleet.link_bw
 
     @property
@@ -526,6 +578,27 @@ def _padded(B: int) -> int:
 
 
 # -- fused decision kernels (numpy in, tuples out) ----------------------------
+def _topk_stable(masked: np.ndarray, k: int) -> np.ndarray:
+    """First ``k`` columns of the row-wise stable ascending argsort of
+    ``masked``, without sorting all D columns.
+
+    ``np.partition`` finds each row's k-th smallest value (the selection
+    boundary) in O(D); everything strictly below the boundary survives, and
+    boundary ties are resolved to the LOWEST device ids — exactly the
+    entries a stable full sort would keep — so the result is bit-identical
+    to ``np.argsort(masked, kind="stable")[:, :k]`` including tie-breaks.
+    Only the <= k survivors are then sorted: O(D + k log k) per row."""
+    B = masked.shape[0]
+    boundary = np.partition(masked, k - 1, axis=1)[:, k - 1]
+    out = np.empty((B, k), np.int64)
+    for b in range(B):
+        below = np.flatnonzero(masked[b] < boundary[b])
+        ties = np.flatnonzero(masked[b] == boundary[b])[: k - below.size]
+        cand = np.concatenate([below, ties])
+        out[b] = cand[np.argsort(masked[b, cand], kind="stable")]
+    return out
+
+
 def ibdash_decide_batch(
     total: np.ndarray,
     pf: np.ndarray,
@@ -544,10 +617,13 @@ def ibdash_decide_batch(
     n_scan = min(int(gamma) + 1, D - 1)  # a scalar iteration accepts or breaks
     # lines 16-18: the priority queue == stable ascending sort over L(T_i)
     # with infeasible devices pushed to +inf.  Only the first n_scan + 1
-    # entries are reachable, so the rest of the permutation is discarded.
-    order = np.argsort(
-        np.where(feasible, total, np.inf), axis=1, kind="stable"
-    )[:, : n_scan + 1]
+    # entries are reachable, so the rest of the permutation is discarded —
+    # and on big fleets never even computed (partial selection, same order).
+    masked = np.where(feasible, total, np.inf)
+    if D > TOPK_PRUNE_MIN_DEVICES and n_scan + 1 < D:
+        order = _topk_stable(masked, n_scan + 1)
+    else:
+        order = np.argsort(masked, axis=1, kind="stable")[:, : n_scan + 1]
     s_total = np.take_along_axis(total, order, axis=1)
     s_pf = np.take_along_axis(pf, order, axis=1)
     if HAVE_JAX and n_scan > 0:

@@ -165,18 +165,31 @@ class ClusterState:
         self.topology_version = -1
         self.refresh_topology()
         self.n_buckets = int(np.ceil(self.horizon / self.dt)) + 1
-        # T_alloc: (devices, task types, time buckets)
+        # T_alloc: (devices, task types, time buckets).  float64 like all
+        # pricing: apply/undo/cancel cycles add and subtract the SAME
+        # values, which cancel exactly in float64 (a float32 accumulator
+        # rounds the f64 interval weights on entry, leaving residue that
+        # the counts_at clip then silently masks).
         self.alloc = np.zeros(
             (len(self.devices), self.model.n_types, self.n_buckets),
-            dtype=np.float32,
+            dtype=np.float64,
         )
         self._horizon_warned = False
 
+    # Fleet vectors handed out to frozen snapshots as shared (zero-copy)
+    # pytree leaves.  When `_leased` is set, the next in-place mutation
+    # copies them first (copy-on-write), so already-taken snapshots stay
+    # immutable without re-deriving O(D) state on every wave.
+    _LEAF_VECTORS = (
+        "_classes", "_lams", "_bw", "_mem_total", "_tiers", "_up", "_down",
+        "_join_times",
+    )
+
     def refresh_topology(self) -> None:
-        """(Re)build the static fleet vectors and the ``(D, D)`` effective
-        link-bandwidth matrix from the current ``Device`` attributes, and
-        bump ``topology_version`` so snapshot-scoped caches (the wave
-        context builder) can detect staleness.
+        """(Re)build the static O(D) fleet vectors from the current
+        ``Device`` attributes, validate the backhaul matrix, and bump
+        ``topology_version`` so snapshot-scoped caches (the wave context
+        builder) can detect staleness.
 
         The bottleneck rule prices the *link*, not the endpoint:
 
@@ -184,8 +197,12 @@ class ClusterState:
 
         — the sender's uplink, the receiver's downlink, and the inter-tier
         backhaul all bound a transfer.  The diagonal is +inf (a co-located
-        transfer crosses no network hop).  Call this after mutating device
-        link rates or tiers mid-run (or use :meth:`set_bandwidth`)."""
+        transfer crosses no network hop).  The dense ``(D, D)`` matrix is
+        never built here: snapshots carry only the factors and sender rows
+        are derived lazily by :meth:`link_row` (the factorization that
+        scales the fleet to 100k devices).  Call this after mutating device
+        attributes wholesale; for a single device use :meth:`set_bandwidth`,
+        which is O(D) instead of a full rebuild."""
         devs = self.devices
         self._classes = np.array([d.cls for d in devs], dtype=np.int64)
         self._lams = np.array([d.lam for d in devs], dtype=np.float64)
@@ -197,20 +214,39 @@ class ClusterState:
         self._tiers = np.array([d.tier for d in devs], dtype=np.int64)
         self._up = np.array([d.up_bw for d in devs], dtype=np.float64)
         self._down = np.array([d.down_bw for d in devs], dtype=np.float64)
-        link = np.minimum(self._up[:, None], self._down[None, :])
-        if self.backhaul is not None:
+        self._join_times = np.array(
+            [d.join_time for d in devs], dtype=np.float64
+        )
+        max_tier = int(self._tiers.max()) if self._tiers.size else 0
+        if self.backhaul is None:
+            # unconstrained single-/multi-tier fleet: an all-inf matrix is
+            # the identity of the min, so the factorized rule degenerates to
+            # min(up[s], down[d]) exactly as before
+            self._backhaul = np.full((max_tier + 1, max_tier + 1), np.inf)
+        else:
             bh = np.asarray(self.backhaul, dtype=np.float64)
-            if self._tiers.size and (
-                bh.ndim != 2 or min(bh.shape) <= int(self._tiers.max())
-            ):
+            if bh.ndim != 2 or bh.shape[0] != bh.shape[1]:
+                raise ValueError(
+                    f"backhaul matrix must be square (T, T), got {bh.shape}"
+                )
+            if self._tiers.size and bh.shape[0] <= max_tier:
                 raise ValueError(
                     f"backhaul matrix {bh.shape} too small for tier "
-                    f"{int(self._tiers.max())}"
+                    f"{max_tier}"
                 )
-            link = np.minimum(link, bh[self._tiers[:, None], self._tiers[None, :]])
-        np.fill_diagonal(link, np.inf)
-        self._link = link
+            self._backhaul = bh
+        self._link_rows: Dict[int, np.ndarray] = {}
+        self._leased = False
         self.topology_version += 1
+
+    def _cow(self) -> None:
+        """Copy-on-write the leased fleet vectors before an in-place
+        mutation, so frozen snapshots taken earlier keep their values."""
+        if not self._leased:
+            return
+        for name in self._LEAF_VECTORS:
+            setattr(self, name, getattr(self, name).copy())
+        self._leased = False
 
     def set_bandwidth(
         self,
@@ -220,8 +256,14 @@ class ClusterState:
         down: Optional[float] = None,
         tier: Optional[int] = None,
     ) -> None:
-        """Update one device's link rates / tier and rebuild the link matrix
-        (the blessed way to change topology between planning waves)."""
+        """Update one device's link rates / tier incrementally (the blessed
+        way to change topology between planning waves).
+
+        Touches only that device's entries in the O(D) factor vectors
+        (copy-on-write when snapshots hold them) and invalidates the cached
+        link rows — no O(D^2) state exists to rebuild, and no other
+        device's leaves are re-derived.  Still bumps ``topology_version``
+        so live wave builders raise instead of mixing topologies."""
         d = self.devices[did]
         if up is not None:
             d.up_bw = float(up)
@@ -229,9 +271,24 @@ class ClusterState:
             d.down_bw = float(down)
         if tier is not None:
             d.tier = int(tier)
+            if d.tier >= self._backhaul.shape[0]:
+                if self.backhaul is not None:
+                    raise ValueError(
+                        f"backhaul matrix {self._backhaul.shape} too small "
+                        f"for tier {d.tier}"
+                    )
+                # unconstrained fleet: grow the all-inf matrix to cover the
+                # new tier id
+                self._backhaul = np.full((d.tier + 1, d.tier + 1), np.inf)
         if up is not None or down is not None:
             d.bandwidth = float(min(d.up_bw, d.down_bw))
-        self.refresh_topology()
+        self._cow()
+        self._up[did] = d.up_bw
+        self._down[did] = d.down_bw
+        self._tiers[did] = d.tier
+        self._bw[did] = d.bandwidth
+        self._link_rows = {}
+        self.topology_version += 1
 
     def install_forecast(self, forecast) -> None:
         """Install (or clear, with ``None``) an availability forecast
@@ -284,6 +341,8 @@ class ClusterState:
         dev.alive_until = float(alive_until)
         dev.init_dynamic()
         self._alive_until[did] = dev.alive_until
+        self._cow()
+        self._join_times[did] = dev.join_time
         self.topology_version += 1
 
     # -- static fleet views ------------------------------------------------------
@@ -314,20 +373,58 @@ class ClusterState:
     def down_bandwidths(self) -> np.ndarray:
         return self._down
 
+    def backhaul_bw(self) -> np.ndarray:
+        """(T, T) inter-tier backhaul rates (all-inf when unconstrained)."""
+        return self._backhaul
+
+    def join_times(self) -> np.ndarray:
+        """(D,) device join times (the availability-clock epochs)."""
+        return self._join_times
+
+    def link_row(self, s: int) -> np.ndarray:
+        """(D,) sender row of the effective link-bandwidth matrix:
+        ``bw_eff[s, d] = min(up[s], down[d], backhaul[tier[s], tier[d]])``,
+        +inf at ``d == s``.
+
+        Derived lazily from the O(D) factors and cached per sender until
+        the topology changes — only rows of devices that actually *send*
+        (DAG parents, the model source) are ever built, so planning cost
+        scales with senders, not D^2."""
+        s = int(s)
+        row = self._link_rows.get(s)
+        if row is None:
+            row = np.minimum(self._up[s], self._down)
+            row = np.minimum(
+                row, self._backhaul[self._tiers[s], self._tiers]
+            )
+            row[s] = np.inf
+            self._link_rows[s] = row
+        return row
+
     def link_bw(self) -> np.ndarray:
         """(D, D) effective link bandwidth: ``bw_eff[s, d] = min(up[s],
-        down[d], backhaul[tier[s], tier[d]])``, +inf on the diagonal."""
-        return self._link
+        down[d], backhaul[tier[s], tier[d]])``, +inf on the diagonal.
+
+        Materialized on demand from the factors — O(D^2) memory, for
+        debugging and small-fleet inspection only; hot paths (the wave
+        builder's transfer vectors, recovery repricing) slice
+        :meth:`link_row` instead."""
+        link = np.minimum(self._up[:, None], self._down[None, :])
+        link = np.minimum(
+            link, self._backhaul[self._tiers[:, None], self._tiers[None, :]]
+        )
+        np.fill_diagonal(link, np.inf)
+        return link
 
     def upload_bw(self) -> np.ndarray:
-        """(D,) effective model-upload bandwidth per device: the row of the
-        link matrix from ``model_source`` (artifacts live on that node) or,
-        when no source is declared, each device's downlink — which equals
-        the deprecated scalar ``bandwidth`` on shimmed fleets, preserving
-        the legacy upload pricing exactly."""
+        """(D,) effective model-upload bandwidth per device: the link row
+        from ``model_source`` (artifacts live on that node) or, when no
+        source is declared, each device's downlink — which equals the
+        deprecated scalar ``bandwidth`` on shimmed fleets, preserving the
+        legacy upload pricing exactly."""
         if self.model_source is None:
             return self._down
-        return self._link[self.model_source]
+        return self.link_row(self.model_source)
 
     def mem_totals(self) -> np.ndarray:
         return self._mem_total
@@ -433,13 +530,26 @@ class ClusterState:
 
         ``counts``/``join_times``/``surv_grid``/``survival`` let hot callers
         (the wave context builder) pass their cached copies; this stays the
-        single construction site for snapshots."""
+        single construction site for snapshots.  The link model is carried
+        as its O(D) factors (``up_bw``/``down_bw``/``backhaul`` + ``tiers``)
+        — never the dense ``(D, D)`` matrix — so a snapshot of a 100k-device
+        fleet is still O(D) memory.  The fleet vectors are shared zero-copy;
+        the next in-place mutation copies them first (see :meth:`_cow`)."""
         if counts is None:
             counts = np.asarray(self.counts_at(t), dtype=np.float64)
         if join_times is None:
-            join_times = np.array([d.join_time for d in self.devices])
+            join_times = self._join_times
         if alive is None:
             alive = self.alive_mask(t)
+        if (survival is None) != (surv_grid is None):
+            # catch the half-supplied forecast HERE, not in the __debug__
+            # twin (silently wrong under python -O otherwise): a (D, K)
+            # survival tensor is meaningless without its (K,) span grid
+            raise ValueError(
+                "snapshot() needs `survival` and `surv_grid` together "
+                f"(got survival={'set' if survival is not None else 'None'}, "
+                f"surv_grid={'set' if surv_grid is not None else 'None'})"
+            )
         if survival is None:
             if self.forecast is None:
                 # no forecast installed: the uniform leaf — every policy
@@ -455,7 +565,9 @@ class ClusterState:
             lams=self._lams,
             bandwidths=self._bw,
             tiers=self._tiers,
-            link_bw=self._link,
+            up_bw=self._up,
+            down_bw=self._down,
+            backhaul=self._backhaul,
             mem_total=self._mem_total,
             join_times=join_times,
             alive=alive,
@@ -470,6 +582,7 @@ class ClusterState:
             # runtime twin of the snapshot-schema lint rule: leaf drift
             # fails HERE, not as a wrong tensor inside a jitted kernel
             snap.validate()
+        self._leased = True
         return snap
 
     # -- the one blessed mutation path ----------------------------------------

@@ -204,12 +204,13 @@ class _WaveContextBuilder:
 
     def __init__(self, cluster: ClusterState, now: float = 0.0):
         self.cluster = cluster
-        self.link = cluster.link_bw()        # (D, D) tier-aware bw_eff matrix
+        # the link model stays factorized: no (D, D) matrix is materialized
+        # anywhere in a wave — transfer_vec slices per-sender rows lazily
         self.upload_bw = cluster.upload_bw() # (D,) artifact-path bandwidth
         self.lams = cluster.lams()
         self.mem_total = cluster.mem_totals()
         self.classes = cluster.classes()
-        self.join = np.array([d.join_time for d in cluster.devices])
+        self.join = cluster.join_times()
         self.n_dev = cluster.n_devices
         # Devices already departed at the planning instant are masked out of
         # every feasibility row: the orchestrator can observe a PAST
@@ -288,11 +289,13 @@ class _WaveContextBuilder:
         ``out_bytes / bw_eff[src, d]`` — the sender's uplink, the receiver's
         downlink, and the tier backhaul all bound the link (Eq. 2's
         ``L(T_i)_d`` priced on the actual path, not the endpoint).  The
-        matrix diagonal is +inf, so staying on ``src`` costs exactly 0."""
+        sender row is derived lazily from the factorized link model
+        (``cluster.link_row``); its ``src`` entry is +inf, so staying on
+        ``src`` costs exactly 0."""
         key = (out_bytes, src)
         v = self._transfer.get(key)
         if v is None:
-            v = out_bytes / self.link[src]
+            v = out_bytes / self.cluster.link_row(src)
             self._transfer[key] = v
         return v
 

@@ -248,14 +248,15 @@ def _best_surviving_replica(engine, run, tname: str):
     else:
         upload = np.zeros(cluster.n_devices)
     transfer = np.zeros(cluster.n_devices)
-    link = cluster.link_bw()
     for dep in spec.deps:
         parent = run.placement.tasks.get(dep)
         if parent is not None and parent.replicas:
             # the survivor re-shards the parent's output over the actual
-            # link (for serving fleets: the KV-cache re-shard cost)
+            # link (for serving fleets: the KV-cache re-shard cost), priced
+            # from the factorized model's lazily derived sender row
             transfer = transfer + (
-                run.app.tasks[dep].out_bytes / link[parent.replicas[0].did]
+                run.app.tasks[dep].out_bytes
+                / cluster.link_row(parent.replicas[0].did)
             )
     total = exec_lat + upload + transfer
     order = np.argsort(np.where(feasible, total, np.inf), kind="stable")

@@ -9,7 +9,9 @@ def build_snapshot(FleetSnapshot, t, arrs):
         lams=arrs["lams"],
         bandwidths=arrs["bandwidths"],
         tiers=arrs["tiers"],
-        link_bw=arrs["link_bw"],
+        up_bw=arrs["up_bw"],
+        down_bw=arrs["down_bw"],
+        backhaul=arrs["backhaul"],
         mem_total=arrs["mem_total"],
         join_times=arrs["join_times"],
         alive=arrs["alive"],

@@ -304,7 +304,7 @@ def test_schema_matches_dataclass_fields():
     from repro.core.batched import FLEET_SNAPSHOT_SCHEMA, FleetSnapshot
 
     assert tuple(f.name for f in fields(FleetSnapshot)) == FLEET_SNAPSHOT_SCHEMA
-    assert len(FLEET_SNAPSHOT_SCHEMA) == 15
+    assert len(FLEET_SNAPSHOT_SCHEMA) == 17
 
 
 # -- the self-clean gate -------------------------------------------------------

@@ -128,8 +128,9 @@ def test_fleet_snapshot_is_a_pytree():
     _jax()  # registers the pytree nodes
     snap = small_cluster(n=3).snapshot(0.0)
     leaves, treedef = jax.tree_util.tree_flatten(snap)
-    # + tiers, link_bw (PR 3), alive (PR 4), surv_grid + survival (PR 5)
-    assert len(leaves) == 15
+    # + tiers (PR 3), alive (PR 4), surv_grid + survival (PR 5); PR 10
+    # factorized the dense link_bw leaf into up_bw + down_bw + backhaul
+    assert len(leaves) == 17
     again = jax.tree_util.tree_unflatten(treedef, leaves)
     assert isinstance(again, FleetSnapshot)
     assert np.array_equal(again.lams, snap.lams)

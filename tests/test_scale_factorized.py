@@ -1,0 +1,373 @@
+"""Factorized link model + incremental snapshots (PR 10): the dense (D, D)
+bw_eff matrix is gone from snapshots and the wave planning path — the
+bottleneck rule is carried as its O(D) factors (up_bw / down_bw / backhaul
++ tiers) and sender rows are derived lazily.  These tests pin:
+
+  * link_row == the dense matrix's row, bit for bit, for every sender;
+  * factorized placements bit-identical to a dense-reference planning pass
+    for all registered policies on the multi-tier grid;
+  * set_bandwidth's single-device incremental path (no O(D^2) work, no
+    full refresh) with copy-on-write protecting already-taken snapshots;
+  * snapshot(survival=...) without surv_grid raises at construction;
+  * float64 T_alloc: apply/undo churn cancels to exactly zero (property);
+  * backhaul shape validation (non-square / too-small / empty fleets) and
+    diagonal-inf semantics surviving the factorized path (co-located
+    transfers free, Perfetto export finite);
+  * IBDASH top-k candidate pre-pruning == the full stable argsort.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.api import (
+    TIER_CLOUD,
+    TIER_DEVICE,
+    TIER_EDGE_SERVER,
+    make_policy,
+    orchestrate,
+    orchestrate_batch,
+)
+from repro.core import batched as batched_mod
+from repro.core.batched import _topk_stable, ibdash_decide_batch
+from repro.core.cluster import ClusterState, Device
+from repro.core.dag import AppDAG, TaskSpec
+from repro.core.interference import InterferenceModel
+from repro.core.orchestrator import _WaveContextBuilder
+from repro.obs import Tracer
+from repro.obs.export import to_chrome_trace, validate_chrome_trace
+from repro.sim import SimConfig, make_multi_tier_cluster, make_profile
+from repro.sim.engine import Engine
+from repro.sim.runner import ALL_SCHEME_NAMES, _make_workload, policy_for
+
+GB = 1e9
+MB = 1e6
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return make_profile(seed=0)
+
+
+def tiered_cluster(ups, downs, tiers, backhaul=None, lam=1e-6, mem=8 * GB,
+                   n_types=1, model_source=None, horizon=120.0):
+    n = len(ups)
+    model = InterferenceModel(
+        base=np.full((n, n_types), 0.2),
+        slope=np.full((n, n_types, n_types), 0.05),
+    )
+    devices = [
+        Device(did=i, cls=i, mem_total=mem, lam=lam, tier=tiers[i],
+               up_bw=float(ups[i]), down_bw=float(downs[i]))
+        for i in range(n)
+    ]
+    return ClusterState(devices=devices, model=model, horizon=horizon,
+                        dt=0.05, backhaul=backhaul,
+                        model_source=model_source)
+
+
+def chain_app(out_bytes=10 * MB):
+    return AppDAG.from_tasks("app", [
+        TaskSpec("parent", ttype=0, out_bytes=out_bytes),
+        TaskSpec("child", ttype=0, deps=("parent",)),
+    ])
+
+
+def same_placement(a, b):
+    assert a.feasible == b.feasible
+    assert a.est_latency == b.est_latency
+    assert set(a.tasks) == set(b.tasks)
+    for k in a.tasks:
+        ta, tb = a.tasks[k], b.tasks[k]
+        assert [r.did for r in ta.replicas] == [r.did for r in tb.replicas]
+        for ra, rb in zip(ta.replicas, tb.replicas):
+            assert ra.est_exec == rb.est_exec
+            assert ra.est_upload == rb.est_upload
+            assert ra.est_transfer == rb.est_transfer
+            assert ra.pred_fail == rb.pred_fail
+
+
+def _forbid_dense(*_a, **_k):
+    raise AssertionError("dense (D, D) link matrix materialized")
+
+
+BACKHAUL = np.array([
+    [25, 500, 15],
+    [500, 1250, 150],
+    [15, 150, 2500],
+]) * MB
+
+
+# ------------------------------------------------ rows == dense, bit-exact --
+def test_link_row_matches_dense_row_for_every_sender():
+    ups = (10 * MB, 20 * MB, 30 * MB, 7 * MB)
+    downs = (40 * MB, 50 * MB, 60 * MB, 9 * MB)
+    tiers = (TIER_DEVICE, TIER_EDGE_SERVER, TIER_CLOUD, TIER_DEVICE)
+    c = tiered_cluster(ups, downs, tiers, backhaul=BACKHAUL)
+    dense = c.link_bw()
+    snap = c.snapshot(0.0)
+    for s in range(4):
+        assert np.array_equal(c.link_row(s), dense[s])
+        assert np.array_equal(snap.link_row(s), dense[s])
+        assert c.link_row(s)[s] == np.inf
+    # the snapshot's on-demand dense view agrees too
+    assert np.array_equal(snap.link_bw, dense)
+
+
+def test_snapshot_carries_no_quadratic_leaf(profile):
+    """Every pytree leaf of a D-device snapshot is O(D) (or O(T^2) for the
+    tiny backhaul) — the dense matrix is not in the tree."""
+    from dataclasses import fields
+
+    cluster = make_multi_tier_cluster(profile, n_devices=60, seed=0)
+    snap = cluster.snapshot(0.0)
+    D = snap.n_devices
+    for f in fields(snap):
+        leaf = getattr(snap, f.name)
+        size = getattr(leaf, "size", 1)
+        assert size < D * D, f"leaf {f.name} is O(D^2): {size}"
+
+
+# --------------------------------- factorized == dense reference, parity --
+@pytest.mark.parametrize("scheme", ALL_SCHEME_NAMES)
+def test_factorized_placements_match_dense_reference(scheme, profile,
+                                                     monkeypatch):
+    """A planning pass whose transfer vectors are sliced from a fully
+    materialized dense matrix places every app identically to the lazy
+    factorized path, for all registered policies on the multi-tier grid."""
+    cfg = SimConfig(n_cycles=1, instances_per_cycle=60, scenario="multi_tier",
+                    seed=0, n_devices=30, latency_budget=4.0)
+    apps, times = _make_workload(cfg)
+
+    def build():
+        return make_multi_tier_cluster(profile, n_devices=cfg.n_devices,
+                                       seed=cfg.seed, horizon=cfg.horizon + 30)
+
+    kw = dict(profile=profile, cfg=cfg)
+    plans_fac = orchestrate_batch(apps, build(), policy_for(scheme, **kw),
+                                  times=times)
+
+    def dense_transfer_vec(self, out_bytes, src):
+        if not hasattr(self, "_dense_ref"):
+            self._dense_ref = self.cluster.link_bw()
+        return out_bytes / self._dense_ref[src]
+
+    monkeypatch.setattr(_WaveContextBuilder, "transfer_vec",
+                        dense_transfer_vec)
+    plans_dense = orchestrate_batch(apps, build(), policy_for(scheme, **kw),
+                                    times=times)
+    for a, b in zip(plans_fac, plans_dense):
+        same_placement(a.placement, b.placement)
+
+
+def test_wave_planning_never_materializes_dense(profile):
+    """End-to-end batched planning on a 600-device multi-tier fleet (above
+    the top-k pruning threshold) with the dense accessors tripwired."""
+    cluster = make_multi_tier_cluster(profile, n_devices=600, seed=0,
+                                      horizon=60.0, dt=0.5)
+    cluster.link_bw = _forbid_dense           # instance-level tripwire
+    apps = [chain_app().relabel(f"#{i}") for i in range(12)]
+    plans = orchestrate_batch(apps, cluster, make_policy("ibdash"))
+    assert all(p.feasible for p in plans)
+
+
+# ------------------------------------- incremental set_bandwidth (sat. 1) --
+def test_set_bandwidth_is_incremental_on_10k_fleet():
+    """A 1-device update on a 10k fleet does no O(D^2) work: no full
+    refresh_topology, no dense matrix, yet the topology version bumps and
+    repricing sees the new rates."""
+    D = 10_000
+    model = InterferenceModel(base=np.full((1, 1), 0.2),
+                              slope=np.zeros((1, 1, 1)))
+    devices = [
+        Device(did=i, cls=0, mem_total=GB, lam=1e-6,
+               up_bw=5 * MB, down_bw=20 * MB, tier=TIER_DEVICE)
+        for i in range(D)
+    ]
+    cluster = ClusterState(devices=devices, model=model, horizon=10.0, dt=1.0)
+    snap_before = cluster.snapshot(0.0)
+    v0 = cluster.topology_version
+    row9_before = cluster.link_row(9).copy()
+
+    # any O(D^2) path from here on fails loudly
+    cluster.refresh_topology = _forbid_dense
+    cluster.link_bw = _forbid_dense
+
+    cluster.set_bandwidth(7, up=1 * MB, down=2 * MB, tier=TIER_EDGE_SERVER)
+
+    assert cluster.topology_version == v0 + 1
+    assert cluster.up_bandwidths()[7] == 1 * MB
+    assert cluster.down_bandwidths()[7] == 2 * MB
+    assert cluster.tiers()[7] == TIER_EDGE_SERVER
+    # the deprecated scalar shim must track the incremental update too
+    assert cluster.bandwidths()[7] == 1 * MB  # repro-lint: disable=deprecation
+    # lazily re-derived rows price the new rates
+    assert cluster.link_row(7)[0] == min(1 * MB, 20 * MB)
+    assert cluster.link_row(9)[7] == min(5 * MB, 2 * MB)
+    assert row9_before[7] == min(5 * MB, 20 * MB)
+    # copy-on-write: the snapshot taken before the update is untouched
+    assert snap_before.up_bw[7] == 5 * MB
+    assert snap_before.down_bw[7] == 20 * MB
+    assert snap_before.tiers[7] == TIER_DEVICE
+
+
+def test_set_bandwidth_matches_full_refresh():
+    """The incremental path and a full refresh_topology agree exactly."""
+    ups = (10 * MB, 20 * MB, 30 * MB)
+    downs = (40 * MB, 50 * MB, 60 * MB)
+    tiers = (TIER_DEVICE, TIER_EDGE_SERVER, TIER_CLOUD)
+    a = tiered_cluster(ups, downs, tiers, backhaul=BACKHAUL)
+    b = tiered_cluster(ups, downs, tiers, backhaul=BACKHAUL)
+    a.set_bandwidth(1, up=3 * MB, down=4 * MB, tier=TIER_CLOUD)
+    b.devices[1].up_bw = 3 * MB
+    b.devices[1].down_bw = 4 * MB
+    b.devices[1].bandwidth = 3 * MB
+    b.devices[1].tier = TIER_CLOUD
+    b.refresh_topology()
+    assert np.array_equal(a.link_bw(), b.link_bw())
+    for s in range(3):
+        assert np.array_equal(a.link_row(s), b.link_row(s))
+
+
+def test_set_bandwidth_tier_out_of_backhaul_raises():
+    c = tiered_cluster((MB, MB), (MB, MB), (0, 0),
+                       backhaul=np.full((1, 1), np.inf))
+    with pytest.raises(ValueError, match="too small"):
+        c.set_bandwidth(0, tier=3)
+
+
+def test_set_bandwidth_grows_unconstrained_backhaul():
+    """With no backhaul matrix the all-inf placeholder grows to cover a new
+    tier id instead of raising."""
+    c = tiered_cluster((MB, 2 * MB), (MB, 2 * MB), (0, 0))
+    c.set_bandwidth(1, tier=TIER_CLOUD)
+    assert c.link_row(0)[1] == MB                 # still min(up, down) only
+
+
+# ----------------------------------- snapshot survival guard (satellite 2) --
+def test_snapshot_survival_without_grid_raises():
+    c = tiered_cluster((MB,), (MB,), (0,))
+    with pytest.raises(ValueError, match="together"):
+        c.snapshot(0.0, survival=np.ones((1, 1)))
+    with pytest.raises(ValueError, match="together"):
+        c.snapshot(0.0, surv_grid=np.zeros(1))
+    snap = c.snapshot(0.0, surv_grid=np.zeros(1), survival=np.ones((1, 1)))
+    assert snap.surv_grid.shape == (1,)
+
+
+# -------------------------------------------- float64 T_alloc (satellite 3) --
+def test_alloc_accumulates_in_float64():
+    c = tiered_cluster((MB,), (MB,), (0,))
+    assert c.alloc.dtype == np.float64
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    ops=st.lists(
+        st.tuples(
+            st.integers(0, 2),                       # did
+            st.integers(0, 1),                       # ttype
+            st.floats(0.0, 90.0),                    # t0
+            st.floats(0.01, 50.0),                   # duration
+        ),
+        min_size=1, max_size=40,
+    ),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_apply_undo_churn_leaves_occupancy_exactly_zero(ops, seed):
+    """Long apply/undo churn — every recorded interval later cancelled, in
+    shuffled order — leaves the float64 T_alloc tensor EXACTLY zero, not
+    clip-masked residue."""
+    n = 3
+    model = InterferenceModel(base=np.full((n, 2), 0.2),
+                              slope=np.zeros((n, 2, 2)))
+    devices = [Device(did=i, cls=i, mem_total=GB, lam=1e-6,
+                      up_bw=MB, down_bw=MB) for i in range(n)]
+    c = ClusterState(devices=devices, model=model, horizon=100.0, dt=0.05)
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("ignore", RuntimeWarning)    # horizon clipping is fine
+        for did, ttype, t0, dur in ops:
+            c.add_interval(did, ttype, t0, t0 + dur)
+        order = np.random.default_rng(seed).permutation(len(ops))
+        for i in order:
+            did, ttype, t0, dur = ops[i]
+            c.add_interval(did, ttype, t0, t0 + dur, w=-1.0)
+    assert (c.alloc == 0.0).all()
+
+
+# ------------------------------- backhaul validation + diag-inf (sat. 4) --
+def test_backhaul_non_square_raises():
+    with pytest.raises(ValueError, match="square"):
+        tiered_cluster((MB, MB), (MB, MB), (0, 1),
+                       backhaul=np.full((2, 3), MB))
+    with pytest.raises(ValueError, match="square"):
+        tiered_cluster((MB,), (MB,), (0,), backhaul=np.full(3, MB))
+
+
+def test_backhaul_too_small_raises():
+    with pytest.raises(ValueError, match="too small"):
+        tiered_cluster((MB, MB), (MB, MB), (0, TIER_CLOUD),
+                       backhaul=np.full((2, 2), MB))
+
+
+def test_empty_fleet_topology():
+    model = InterferenceModel(base=np.full((1, 1), 0.2),
+                              slope=np.zeros((1, 1, 1)))
+    c = ClusterState(devices=[], model=model, backhaul=np.full((2, 2), MB))
+    assert c.snapshot(0.0).n_devices == 0
+    with pytest.raises(ValueError, match="square"):
+        ClusterState(devices=[], model=model, backhaul=np.full((2, 3), MB))
+
+
+def test_colocated_transfer_free_through_factorized_path():
+    """One-device fleet: the chain's child lands next to its parent and the
+    diagonal-inf row prices the transfer at exactly 0 (not nan/inf)."""
+    c = tiered_cluster((MB,), (2 * MB,), (0,), backhaul=BACKHAUL[:1, :1])
+    plan = orchestrate(chain_app(), c, 0.0, make_policy("ibdash"))
+    child = plan.tasks["child"]
+    assert child.replicas[0].did == 0
+    assert child.replicas[0].est_transfer == 0.0
+    assert np.isfinite(child.replicas[0].est_total)
+
+
+def test_perfetto_export_finite_with_colocated_transfers():
+    """Traced end-to-end run on a co-locating fleet: span attribution stays
+    finite and the Chrome trace survives strict JSON validation (allow_nan
+    rejects inf/nan anywhere in the document)."""
+    c = tiered_cluster((MB, MB), (2 * MB, 2 * MB), (0, 0), horizon=200.0)
+    tr = Tracer()
+    eng = Engine(c, make_policy("ibdash"), noise_sigma=0.0, trace=tr)
+    eng.add_arrivals([chain_app().relabel(f"#{i}") for i in range(3)],
+                     [0.0, 0.1, 0.2])
+    eng.drain()
+    doc = to_chrome_trace(tr)
+    assert validate_chrome_trace(doc) > 0
+
+
+# ---------------------------------------------- IBDASH top-k pre-pruning --
+def test_topk_stable_matches_full_stable_argsort():
+    rng = np.random.default_rng(3)
+    for _ in range(25):
+        # tie-heavy rows: few distinct values + infeasible +inf columns
+        m = rng.choice([0.25, 0.5, 0.5, 1.0, np.inf], size=(9, 300))
+        for k in (1, 2, 5, 299):
+            assert np.array_equal(
+                _topk_stable(m, k),
+                np.argsort(m, axis=1, kind="stable")[:, :k],
+            )
+
+
+def test_ibdash_pruned_matches_unpruned(monkeypatch):
+    """decide_batch on a 1000-device fleet with pruning active == the same
+    call with pruning disabled (full argsort), replica sets included."""
+    rng = np.random.default_rng(7)
+    B, D = 32, 1000
+    # quantized totals make ties common, exercising the boundary logic
+    total = rng.choice(np.linspace(0.1, 2.0, 12), size=(B, D))
+    pf = rng.uniform(0.0, 0.9, size=(B, D))
+    feasible = rng.uniform(size=(B, D)) > 0.1
+    args = (total, pf, feasible, 0.5, 0.25, 2)
+    pruned = ibdash_decide_batch(*args)
+    monkeypatch.setattr(batched_mod, "TOPK_PRUNE_MIN_DEVICES", 10**9)
+    unpruned = ibdash_decide_batch(*args)
+    assert pruned == unpruned
